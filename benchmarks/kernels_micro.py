@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks.
+
+Interpret mode executes kernel bodies in Python — wall times here measure
+the *oracle* XLA path and validate kernel/oracle agreement at bench shapes;
+the kernels' TPU performance is assessed structurally (§Roofline / §Perf).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.fused_prune_aggregate.ops import fused_prune_aggregate
+from repro.kernels.fused_prune_aggregate.ref import fused_prune_aggregate_ref
+from repro.kernels.topk_decode_attention.ref import (
+    full_decode_attention_ref,
+    topk_decode_attention_ref,
+)
+from repro.kernels.topk_select.ref import topk_select_ref
+import jax
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # pruner oracle at paper-ish scale
+    t, d, k = 2048, 512, 50
+    s = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    m = jnp.asarray(rng.random((t, d)) < 0.8)
+    f = jax.jit(lambda s, m: topk_select_ref(s, m, k))
+    emit("kernel_topk_select_ref_2048x512_k50", time_fn(f, s, m) * 1e6, "")
+
+    # fused prune+aggregate: interpret kernel vs oracle agreement + oracle time
+    tt, dd, h, dh, n, kk = 64, 128, 8, 8, 4096, 16
+    hp = jnp.asarray(rng.normal(size=(n, h, dh)), jnp.float32)
+    ts = jnp.asarray(rng.normal(size=(n, h)), jnp.float32)
+    td = jnp.asarray(rng.normal(size=(tt, h)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, size=(tt, dd)), jnp.int32)
+    msk = jnp.asarray(rng.random((tt, dd)) < 0.9)
+    out_k = fused_prune_aggregate(hp, ts, td, idx, msk, prune_k=kk)
+    out_r = fused_prune_aggregate_ref(ts[idx], msk, td, idx, hp, kk)
+    err = float(jnp.abs(out_k - out_r).max())
+    fr = jax.jit(lambda: fused_prune_aggregate_ref(ts[idx], msk, td, idx, hp, kk))
+    emit("kernel_fused_prune_aggregate_oracle", time_fn(fr) * 1e6,
+         f"kernel_vs_oracle_maxerr={err:.2e}")
+
+    # decode attention: pruned vs full oracle (the ADE LM-side saving)
+    b, hh, hkv, hdd, ss, kd = 4, 16, 4, 64, 8192, 256
+    q = jnp.asarray(rng.normal(size=(b, hh, hdd)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(b, ss, hkv, hdd)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(b, ss, hkv, hdd)), jnp.float32)
+    lens = jnp.full((b,), ss, jnp.int32)
+    tf = time_fn(jax.jit(lambda: full_decode_attention_ref(q, kc, vc, lens)))
+    tp = time_fn(jax.jit(lambda: topk_decode_attention_ref(q, kc, vc, lens, kd)))
+    emit("kernel_decode_attn_full_8k", tf * 1e6, "")
+    emit("kernel_decode_attn_topk256_8k", tp * 1e6, f"vs_full={tf / tp:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

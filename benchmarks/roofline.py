@@ -1,0 +1,52 @@
+"""§Roofline table generator: reads experiments/dryrun/*.json and prints
+the per-(arch × shape) three-term roofline with dominant bottleneck."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+
+def load(dir_: str = "experiments/dryrun", mesh: str = "single"):
+    recs = []
+    for f in sorted(glob.glob(f"{dir_}/*_{mesh}.json")):
+        recs.append(json.loads(Path(f).read_text()))
+    return recs
+
+
+def table(recs):
+    rows = []
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], r["status"],
+                         r.get("reason", r.get("error", ""))[:60]))
+            continue
+        rows.append(
+            (
+                r["arch"], r["shape"],
+                f"{r['t_compute']:.4g}", f"{r['t_memory']:.4g}",
+                f"{r['t_collective']:.4g}", r["dominant"],
+                f"{(r['useful_flops_ratio'] or 0):.3f}",
+                f"{(r['roofline_fraction'] or 0):.4f}",
+            )
+        )
+    return rows
+
+
+def main():
+    recs = load()
+    for row in table(recs):
+        if len(row) == 4:
+            emit(f"roofline_{row[0]}_{row[1]}", 0.0, f"{row[2]}:{row[3]}")
+        else:
+            emit(
+                f"roofline_{row[0]}_{row[1]}", 0.0,
+                f"t_comp={row[2]}s;t_mem={row[3]}s;t_coll={row[4]}s;"
+                f"dominant={row[5]};useful={row[6]};roofline_frac={row[7]}",
+            )
+
+
+if __name__ == "__main__":
+    main()

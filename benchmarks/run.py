@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. §Roofline rows read from the
+dry-run artifacts in experiments/dryrun (run `python -m repro.launch.dryrun`
+first for those; missing artifacts just skip that section).
+"""
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig2_disparity,
+        fig3_overhead,
+        fig7_speedup,
+        fig8_memory_energy,
+        fig9_accuracy,
+        kernels_micro,
+        roofline,
+    )
+
+    print("name,us_per_call,derived", flush=True)
+    for mod in (
+        fig2_disparity,
+        fig3_overhead,
+        fig7_speedup,
+        fig8_memory_energy,
+        fig9_accuracy,
+        kernels_micro,
+        roofline,
+    ):
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness going; record the failure
+            print(f"{mod.__name__},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

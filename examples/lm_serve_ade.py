@@ -1,0 +1,56 @@
+"""Serve a small gemma3-family model with batched requests, comparing full
+decode attention against the ADE top-K pruned decode (the paper's technique
+on the LM side): tokens/s and output agreement.
+
+    PYTHONPATH=src python examples/lm_serve_ade.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+
+base = dataclasses.replace(
+    get_config("gemma3_4b", smoke=True),
+    num_layers=4, d_model=128, num_heads=8, num_kv_heads=4, head_dim=16,
+    d_ff=512, vocab_size=4096, sliding_window=64, name="gemma3-mini",
+)
+key = jax.random.PRNGKey(0)
+b, t, gen = 8, 192, 32
+max_len = t + gen
+
+
+def run(cfg):
+    model = build_model(cfg)
+    params = model.init(key)  # same key -> same weights in both configs
+    prompts = jax.random.randint(jax.random.fold_in(key, 1), (b, t), 0, cfg.vocab_size)
+    logits, cache = model.prefill(params, prompts, max_len=max_len)
+    step = jax.jit(model.decode_step)
+    tok = logits.argmax(-1)[:, None].astype(jnp.int32)
+    outs = [tok]
+    # warm the compile before timing
+    _ = step(params, tok, t, jax.tree.map(lambda x: x, cache))
+    t0 = time.perf_counter()
+    for pos in range(t, max_len):
+        logits, cache = step(params, tok, pos, cache)
+        tok = logits.argmax(-1)[:, None].astype(jnp.int32)
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    return jnp.concatenate(outs, 1), b * gen / dt
+
+
+full_cfg = dataclasses.replace(base, attn_prune_k=None)
+ade_cfg = dataclasses.replace(base, attn_prune_k=32)
+
+out_full, tps_full = run(full_cfg)
+out_ade, tps_ade = run(ade_cfg)
+agree = float((out_full == out_ade).mean())
+print(f"full decode:      {tps_full:8.1f} tok/s")
+print(f"ADE top-32 decode:{tps_ade:8.1f} tok/s")
+print(f"greedy-token agreement full vs pruned: {agree:.1%}")
+print("(CPU timings are illustrative; the TPU-side saving is the V-read cut "
+      "— see kernels/topk_decode_attention and §Roofline.)")

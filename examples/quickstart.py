@@ -1,0 +1,36 @@
+"""Quickstart: the paper's technique end-to-end in ~40 lines.
+
+Builds a synthetic ACM heterograph, trains HAN briefly, then runs inference
+under the three execution flows — staged (traditional), staged+pruned, and
+the ADE fused flow — showing identical pruned results, the workload cut,
+and the accuracy retention.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import pipeline
+from repro.core.flows import FlowConfig
+
+K = 8
+
+print("== ADE-HGNN quickstart (HAN on synthetic ACM) ==")
+task = pipeline.prepare("han", "acm", scale=0.06, max_degree=64, seed=0)
+print(f"graph: {task.graph.num_nodes} | semantic graphs: "
+      f"{[ (sg.name, sg.num_edges) for sg in task.sgs ]}")
+
+params = pipeline.train_hgnn(task, steps=60, lr=5e-3, log_every=20)
+
+acc_full = pipeline.accuracy(task, params, FlowConfig("staged"))
+acc_ade = pipeline.accuracy(task, params, FlowConfig("fused", prune_k=K))
+degs = np.concatenate([sg.degrees() for sg in task.sgs])
+cut = 1 - np.minimum(degs, K).sum() / degs.sum()
+
+lg_staged = np.asarray(task.logits(params, FlowConfig("staged_pruned", prune_k=K)))
+lg_fused = np.asarray(task.logits(params, FlowConfig("fused", prune_k=K)))
+
+print(f"accuracy  full: {acc_full:.4f}   ADE-pruned (K={K}): {acc_ade:.4f} "
+      f"(loss {acc_full - acc_ade:+.4f} — paper: 0.11%–1.47%)")
+print(f"aggregation workload cut by pruning: {cut:.1%}")
+print(f"fused flow == staged pruned flow: "
+      f"max|Δlogits| = {np.abs(lg_staged - lg_fused).max():.2e}")

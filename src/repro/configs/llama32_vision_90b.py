@@ -1,0 +1,47 @@
+"""llama-3.2-vision-90b [vlm] — 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256 — 80 self-attn + 20 gated cross-attn image layers (1:4).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+
+The vision frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings (B, num_img_tokens, d_model); cross-attn layers
+attend to them. The ADE technique applies to the cross-attention: image
+tokens are the neighbor set, pruned per query by attention disparity.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        num_layers=100,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=28672,
+        vocab_size=128256,
+        cycle=("A", "A", "A", "A", "C"),
+        rope_base=500_000.0,
+        num_img_tokens=4096,
+        param_dtype="bfloat16",
+        fsdp=True,
+        grad_accum=8,
+        seq_shard_activations=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b-smoke",
+        family="vlm",
+        num_layers=4,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        cycle=("A", "C"),
+        num_img_tokens=16,
+        dtype="float32",
+        remat=False,
+    )

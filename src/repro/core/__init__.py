@@ -1,0 +1,11 @@
+"""The paper's contribution: attention-disparity-exploiting HGNN execution.
+
+Public API:
+  * ``hetgraph``  — HetG container + Semantic Graph Build (SGB)
+  * ``attention`` — decomposed additive attention (Eq. 2) + NA flows
+  * ``pruning``   — runtime top-K retention domain (Algorithm 1, TPU-native)
+  * ``flows``     — staged / staged_pruned / fused execution flows
+  * ``pipeline``  — dataset → SGB → model assembly + training
+  * ``models``    — HAN, RGAT, Simple-HGN
+"""
+from repro.core.flows import FlowConfig  # noqa: F401

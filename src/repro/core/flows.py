@@ -1,0 +1,57 @@
+"""Execution-flow configuration shared by all HGNN models.
+
+``flow``:
+  * ``staged``        — traditional baseline (no pruning)
+  * ``staged_pruned`` — separate pruning pass then staged NA (Fig. 3 setup)
+  * ``fused``         — ADE operation-fusion flow (scan-tiled jnp)
+  * ``fused_kernel``  — ADE flow via the Pallas kernel (interpret-mode on CPU)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.core import attention
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowConfig:
+    flow: str = "staged"
+    prune_k: Optional[int] = None
+    tile: int = 128
+
+    def __post_init__(self):
+        assert self.flow in ("staged", "staged_pruned", "fused", "fused_kernel")
+
+
+def run_aggregate(
+    cfg: FlowConfig,
+    h_proj: jax.Array,
+    scores: attention.DecomposedScores,
+    nbr_idx,
+    nbr_mask,
+    edge_type=None,
+) -> jax.Array:
+    if cfg.flow == "staged":
+        return attention.aggregate_staged(
+            h_proj, scores, nbr_idx, nbr_mask, edge_type, prune_k=None
+        )
+    if cfg.flow == "staged_pruned":
+        return attention.aggregate_staged(
+            h_proj, scores, nbr_idx, nbr_mask, edge_type, prune_k=cfg.prune_k
+        )
+    # paper §4.3: targets with |N(v)| <= K bypass the pruner entirely (the
+    # retention domain is a no-op there). Static per-graph routing: when the
+    # whole semantic graph fits under K, the fused flow IS the plain
+    # aggregation — run it without the retention-domain machinery.
+    if cfg.prune_k is not None and cfg.prune_k >= nbr_idx.shape[1]:
+        return attention.aggregate_staged(
+            h_proj, scores, nbr_idx, nbr_mask, edge_type, prune_k=None
+        )
+    return attention.aggregate_fused(
+        h_proj, scores, nbr_idx, nbr_mask, edge_type,
+        prune_k=cfg.prune_k, tile=cfg.tile,
+        use_kernel=(cfg.flow == "fused_kernel"),
+    )

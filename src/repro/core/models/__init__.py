@@ -1,0 +1,3 @@
+from repro.core.models.han import HAN  # noqa: F401
+from repro.core.models.rgat import RGAT  # noqa: F401
+from repro.core.models.simple_hgn import SimpleHGN  # noqa: F401

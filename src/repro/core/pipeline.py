@@ -1,0 +1,150 @@
+"""End-to-end HGNN task assembly: dataset → SGB → model → apply closure.
+
+This is the piece benchmarks/examples/tests share. ``prepare()`` returns a
+``HGNNTask`` whose ``logits(params, flow)`` runs the full FP→NA→SF pipeline
+under any execution flow, and whose ``splits`` give a train/val/test node
+split for accuracy experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hetgraph
+from repro.core.flows import FlowConfig
+from repro.core.models import HAN, RGAT, SimpleHGN
+from repro.data import synthetic
+
+
+@dataclasses.dataclass
+class HGNNTask:
+    name: str
+    model_name: str
+    model: object
+    graph: hetgraph.HetGraph
+    params: dict
+    logits: Callable[[dict, FlowConfig], jax.Array]
+    labels: jax.Array
+    splits: Dict[str, np.ndarray]
+    sgs: list  # semantic graphs driving NA (for stats/benchmarks)
+
+    @property
+    def num_edges(self) -> int:
+        return int(sum(sg.num_edges for sg in self.sgs))
+
+
+def _splits(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_tr, n_va = int(0.6 * n), int(0.2 * n)
+    return {
+        "train": perm[:n_tr],
+        "val": perm[n_tr: n_tr + n_va],
+        "test": perm[n_tr + n_va:],
+    }
+
+
+def prepare(
+    model_name: str,
+    dataset: str,
+    scale: float = 0.1,
+    max_degree: Optional[int] = 256,
+    seed: int = 0,
+) -> HGNNTask:
+    g = synthetic.DATASETS[dataset](scale=scale, seed=seed)
+    feats = {t: jnp.asarray(f) for t, f in g.features.items()}
+    offsets = g.type_offsets()
+    g_meta = {
+        "node_types": g.node_types,
+        "offsets": offsets,
+        "num_nodes": g.num_nodes,
+        "label_type": g.label_type,
+    }
+    key = jax.random.PRNGKey(seed)
+
+    if model_name == "han":
+        mps = synthetic.METAPATHS[dataset]
+        sgs = hetgraph.build_metapath_graphs(g, mps, max_degree=max_degree, seed=seed)
+        model = HAN()
+        params = model.init(key, g, list(mps))
+        n_t = g.num_nodes[g.label_type]
+        off = offsets[g.label_type]
+
+        def logits(p, flow=FlowConfig()):
+            return model.apply(p, feats, sgs, g.node_types, off, n_t, flow)
+
+    elif model_name == "rgat":
+        sgs = hetgraph.build_relation_graphs(g, max_degree=max_degree, seed=seed)
+        model = RGAT()
+        params = model.init(key, g, [sg.name for sg in sgs])
+
+        def logits(p, flow=FlowConfig()):
+            return model.apply(p, feats, sgs, g_meta, flow)
+
+    elif model_name == "simple_hgn":
+        union = hetgraph.build_union_graph(g, max_degree=max_degree, seed=seed)
+        sgs = list(union.values())
+        model = SimpleHGN()
+        params = model.init(key, g, num_edge_types=sgs[0].num_edge_types)
+
+        def logits(p, flow=FlowConfig()):
+            return model.apply(p, feats, union, g_meta, flow)
+
+    else:
+        raise ValueError(model_name)
+
+    return HGNNTask(
+        name=f"{model_name}/{dataset}",
+        model_name=model_name,
+        model=model,
+        graph=g,
+        params=params,
+        logits=logits,
+        labels=jnp.asarray(g.labels),
+        splits=_splits(g.num_nodes[g.label_type], seed),
+        sgs=sgs,
+    )
+
+
+def train_hgnn(
+    task: HGNNTask,
+    steps: int = 200,
+    lr: float = 5e-3,
+    flow: FlowConfig = FlowConfig(),
+    log_every: int = 0,
+):
+    """Full-batch node-classification training (inference experiments in the
+    paper run on trained models; we train in-framework)."""
+    from repro.optim import adamw
+
+    opt = adamw(lr=lr, weight_decay=1e-4)
+    tr = jnp.asarray(task.splits["train"])
+
+    def loss_fn(p):
+        lg = task.logits(p, flow)[tr]
+        lab = task.labels[tr]
+        logp = jax.nn.log_softmax(lg)
+        return -jnp.take_along_axis(logp, lab[:, None], axis=1).mean()
+
+    @jax.jit
+    def step_fn(p, s):
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        p, s = opt.update(grads, s, p)
+        return p, s, loss
+
+    params, state = task.params, opt.init(task.params)
+    for i in range(steps):
+        params, state, loss = step_fn(params, state)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(f"  step {i:4d} loss {float(loss):.4f}")
+    return params
+
+
+def accuracy(task: HGNNTask, params, flow: FlowConfig = FlowConfig(), split="test"):
+    idx = jnp.asarray(task.splits[split])
+    pred = task.logits(params, flow)[idx].argmax(-1)
+    return float((pred == task.labels[idx]).mean())

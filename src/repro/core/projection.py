@@ -1,0 +1,46 @@
+"""Feature Projection (FP) stage: per-type transformation into a shared
+(heads, dh) space, emitted as one global table so every semantic graph can
+gather from the same array (global vertex ids = type-offset + local id)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def glorot(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[0], int(np.prod(shape[1:]))
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -lim, lim)
+
+
+def init_projection(
+    key, feat_dims: Dict[str, int], heads: int, dh: int
+) -> Dict[str, Dict[str, jax.Array]]:
+    params = {}
+    for i, (t, f) in enumerate(sorted(feat_dims.items())):
+        k = jax.random.fold_in(key, i)
+        params[t] = {
+            "w": glorot(k, (f, heads * dh)),
+            "b": jnp.zeros((heads * dh,)),
+        }
+    return params
+
+
+def project_features(
+    params: Dict[str, Dict[str, jax.Array]],
+    features: Dict[str, jax.Array],
+    node_types: Tuple[str, ...],
+    heads: int,
+    dh: int,
+) -> jax.Array:
+    """FP for every node type -> (N_total, heads, dh) global table, in
+    ``node_types`` (= global id) order."""
+    outs = []
+    for t in node_types:
+        p = params[t]
+        h = features[t] @ p["w"] + p["b"]
+        outs.append(h.reshape(-1, heads, dh))
+    return jnp.concatenate(outs, axis=0)

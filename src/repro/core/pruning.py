@@ -1,0 +1,109 @@
+"""Runtime neighbor pruning — the paper's Algorithm 1, TPU-native.
+
+The paper keeps, per target vertex, a K-slot *retention domain* organized as
+a min-heap: each arriving neighbor coefficient is compared against the heap
+root; smaller-or-equal coefficients are discarded instantly, larger ones
+replace the root followed by an O(log K) heapify.
+
+On TPU a scalar heap is the wrong shape. The equivalent vector idiom is an
+**online top-K merge**: stream neighbors in tiles, and merge each tile into
+the retention domain with `lax.top_k` over `concat([kept, tile])`. Semantics
+match the heap exactly (running top-K with first-arrival tie-breaking —
+`lax.top_k` prefers lower indices, and `kept` is concatenated first, so an
+incumbent beats an equal newcomer, mirroring Algorithm 1 line 22).
+
+Three implementations, all used:
+  * ``topk_keep_mask``      — oracle: one-shot `lax.top_k` over the padded row.
+  * ``streaming_topk``      — scan-over-tiles online variant (jnp, the
+                              semantic model of the Pallas kernel).
+  * the Pallas kernel in ``repro.kernels.topk_select`` consumes this module's
+    semantics and is tested against ``topk_keep_mask``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -3.0e38  # sentinel below any real score
+
+
+def masked_scores(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.where(mask, scores, NEG)
+
+
+def topk_keep_mask(scores: jax.Array, mask: jax.Array, k: int) -> jax.Array:
+    """Oracle keep-mask: True for the k largest *valid* scores per row.
+
+    scores: (T, D) float; mask: (T, D) bool. Ties broken by lower slot index
+    (first arrival), matching Algorithm 1. If a row has fewer than k valid
+    neighbors, all valid ones are kept.
+    """
+    t, d = scores.shape
+    if k >= d:
+        return mask
+    s = masked_scores(scores, mask)
+    _, idx = jax.lax.top_k(s, k)  # (T, k), lower index wins ties
+    keep = jnp.zeros((t, d), dtype=bool)
+    keep = keep.at[jnp.arange(t)[:, None], idx].set(True)
+    return keep & mask
+
+
+def streaming_topk(
+    scores: jax.Array, mask: jax.Array, k: int, tile: int = 128
+) -> Tuple[jax.Array, jax.Array]:
+    """Online retention domain: returns (top-k scores desc, global slot ids).
+
+    This is the reference model of the hardware pruner: the carry is the
+    retention domain; each step merges one tile. Output ids of padding slots
+    are -1.
+    """
+    t, d = scores.shape
+    pad = (-d) % tile
+    s = masked_scores(scores, mask)
+    if pad:
+        s = jnp.pad(s, ((0, 0), (0, pad)), constant_values=NEG)
+    n_tiles = s.shape[1] // tile
+    s_tiles = s.reshape(t, n_tiles, tile).transpose(1, 0, 2)  # (n, T, tile)
+    ids = jnp.arange(n_tiles * tile, dtype=jnp.int32).reshape(n_tiles, tile)
+
+    def step(carry, inp):
+        rd_s, rd_i = carry  # (T, k) retention domain
+        tile_s, tile_i = inp  # (T, tile), (tile,)
+        cat_s = jnp.concatenate([rd_s, tile_s], axis=1)
+        cat_i = jnp.concatenate(
+            [rd_i, jnp.broadcast_to(tile_i[None, :], (t, tile))], axis=1
+        )
+        new_s, sel = jax.lax.top_k(cat_s, k)
+        new_i = jnp.take_along_axis(cat_i, sel, axis=1)
+        return (new_s, new_i), None
+
+    rd0 = (
+        jnp.full((t, k), NEG, dtype=s.dtype),
+        jnp.full((t, k), -1, dtype=jnp.int32),
+    )
+    (rd_s, rd_i), _ = jax.lax.scan(step, rd0, (s_tiles, ids))
+    rd_i = jnp.where(rd_s <= NEG / 2, -1, rd_i)
+    return rd_s, rd_i
+
+
+def keep_mask_from_ids(ids: jax.Array, d: int) -> jax.Array:
+    """(T, k) retained slot ids (-1 = empty) -> (T, D) keep mask."""
+    t, k = ids.shape
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    keep = jnp.zeros((t, d), dtype=bool)
+    keep = keep.at[jnp.arange(t)[:, None], safe].max(valid)
+    return keep
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile"))
+def streaming_keep_mask(
+    scores: jax.Array, mask: jax.Array, k: int, tile: int = 128
+) -> jax.Array:
+    if k >= scores.shape[1]:
+        return mask
+    _, ids = streaming_topk(scores, mask, k, tile)
+    return keep_mask_from_ids(ids, scores.shape[1])

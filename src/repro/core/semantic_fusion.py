@@ -1,0 +1,32 @@
+"""Semantic Fusion (SF) stage."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projection import glorot
+
+
+def init_semantic_attention(key, dim: int, hidden: int = 128):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": glorot(k1, (dim, hidden)),
+        "b": jnp.zeros((hidden,)),
+        "q": glorot(k2, (hidden, 1))[:, 0],
+    }
+
+
+def semantic_attention(params, zs: jax.Array) -> jax.Array:
+    """HAN's SF: zs (P, T, dim) per-metapath embeddings -> (T, dim).
+
+    w_p = mean_v qᵀ tanh(W z_p,v + b);  β = softmax_p(w_p);  z = Σ β_p z_p.
+    """
+    e = jnp.tanh(zs @ params["w"] + params["b"]) @ params["q"]  # (P, T)
+    w = e.mean(axis=1)  # (P,)
+    beta = jax.nn.softmax(w)
+    return jnp.einsum("p,ptd->td", beta, zs)
+
+
+def mean_fusion(zs: jax.Array) -> jax.Array:
+    """RGAT's SF: plain mean over relations."""
+    return zs.mean(axis=0)

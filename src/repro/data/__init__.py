@@ -1,0 +1,2 @@
+from repro.data.synthetic import make_acm, make_dblp, make_imdb, make_hetg  # noqa: F401
+from repro.data.tokens import TokenPipeline  # noqa: F401

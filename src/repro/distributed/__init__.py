@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (  # noqa: F401
+    axis_rules,
+    constrain,
+    param_sharding_tree,
+    resolve_spec,
+)

@@ -1,0 +1,35 @@
+"""Probe mode: fully-unrolled scans for exact HLO cost accounting.
+
+XLA's HloCostAnalysis visits a `while` body once — FLOPs/bytes inside
+`lax.scan` are under-counted by the trip count. The dry-run therefore
+compiles each cell twice more at shallow depth (1 and 2 cycle units) with
+every scan *fully unrolled* (exact costs), and extrapolates linearly to the
+real depth: cost(n) = base + n·per_cycle. `xscan` is the drop-in scan used
+by all model code; inside `probe_mode()` it unrolls.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+
+_PROBE = contextvars.ContextVar("repro_probe_mode", default=False)
+
+
+@contextlib.contextmanager
+def probe_mode():
+    tok = _PROBE.set(True)
+    try:
+        yield
+    finally:
+        _PROBE.reset(tok)
+
+
+def probing() -> bool:
+    return _PROBE.get()
+
+
+def xscan(body, carry, xs, length=None):
+    """lax.scan that fully unrolls under probe_mode."""
+    return jax.lax.scan(body, carry, xs, length=length, unroll=True if _PROBE.get() else 1)

@@ -1,0 +1,173 @@
+"""Logical-axis sharding rules (MaxText-style), resolved against the ambient
+mesh at trace time.
+
+Layers annotate activations with *logical* axis names via ``constrain``;
+parameters get PartitionSpecs from name-pattern rules via
+``param_sharding_tree``. Rules resolve to whatever mesh is in context
+(``jax.set_mesh``): the single-pod ``("data","model")`` mesh, the multi-pod
+``("pod","data","model")`` mesh, or no mesh at all (tests/benches — no-op).
+An axis is silently dropped when the dim size does not divide the mesh axis
+(e.g. 8 kv heads on a 16-way model axis) — XLA would pad, we prefer
+replication there and shard a different dim instead.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import re
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (in order; tuple = shard over several)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "moe_group": ("pod", "data"),
+    "cache_seq": ("model",),  # decode KV cache: flash-decode seq sharding
+    "act_seq": ("model",),  # Megatron-SP residual-stream seq sharding
+    "ctx_seq": (),  # encoder/image context length
+    "fsdp": ("data",),  # ZeRO-3 param sharding (joined by pod when present)
+    "lru": ("model",),
+}
+
+_RULES = dict(DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def axis_rules(overrides: Dict[str, Tuple[str, ...]]):
+    """Temporarily override logical->physical rules (used by §Perf passes)."""
+    global _RULES
+    old = dict(_RULES)
+    _RULES.update(overrides)
+    try:
+        yield
+    finally:
+        _RULES = old
+
+
+def _mesh_axes() -> Dict[str, int]:
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or not am.axis_names:
+        return {}
+    return dict(zip(am.axis_names, am.axis_sizes))
+
+
+def resolve_spec(
+    names: Sequence[Optional[str]], shape: Sequence[int]
+) -> Optional[P]:
+    """Logical names per dim -> PartitionSpec against the ambient mesh."""
+    mesh = _mesh_axes()
+    if not mesh:
+        return None
+    spec = []
+    used = set()
+    for name, dim in zip(names, shape):
+        axes = []
+        size = 1
+        for ax in _RULES.get(name, ()) if name else ():
+            if ax in mesh and ax not in used and dim % (size * mesh[ax]) == 0:
+                axes.append(ax)
+                size *= mesh[ax]
+        used.update(axes)
+        spec.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*spec)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    spec = resolve_spec(names, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding: name-pattern -> logical axes per dim.
+# Patterns are matched against the '/'-joined pytree path, first match wins.
+# `F` marks dims additionally sharded over the fsdp axes when cfg.fsdp.
+# ---------------------------------------------------------------------------
+
+_PARAM_PATTERNS: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"embed/table", ("vocab", "F")),
+    (r"lm_head/w", ("F", "vocab")),
+    (r"(attn|cross).*/w[qkv]$", ("F", "heads")),
+    (r"(attn|cross).*/wo$", ("heads", "F")),
+    (r"(attn|cross).*/b[qkv]$", ("heads",)),
+    (r"moe/router/w", (None, "experts")),
+    (r"moe/experts/w(i|g)$", ("experts", "F", "ffn")),
+    (r"moe/experts/wo$", ("experts", "ffn", "F")),
+    (r"mlp/w(i|g)$", ("F", "ffn")),
+    (r"mlp/wo$", ("ffn", "F")),
+    (r"lru/(wx|wgate)$", ("F", "lru")),
+    (r"lru/w_out$", ("lru", "F")),
+    (r"lru/(wa|wi)$", (None, "lru")),
+    (r"lru/conv_w", (None, "lru")),
+    (r"lru/(lam|ba|bi|conv_b)$", ("lru",)),
+    (r"rwkv/w[rkvg]$", ("F", "heads")),
+    (r"rwkv/wo$", ("heads", "F")),
+    (r"rwkv/(wk2)$", ("F", "ffn")),
+    (r"rwkv/(wv2)$", ("ffn", "F")),
+    (r"rwkv/(wr2)$", ("F", None)),
+    (r"rwkv/decay_a$", ("F", None)),
+    (r"rwkv/decay_b$", (None, "heads")),
+    (r"rwkv/u$", ("heads", None)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_logical_axes(path_str: str, ndim: int, fsdp: bool):
+    for pat, axes in _PARAM_PATTERNS:
+        if re.search(pat, path_str):
+            # stacked layer params have a leading layer dim; right-align
+            pad = ndim - len(axes)
+            full = (None,) * pad + tuple(axes)
+            return tuple(
+                ("fsdp" if fsdp else None) if a == "F" else a for a in full
+            )
+    return (None,) * ndim
+
+
+def param_sharding_tree(params_shape, mesh, fsdp: bool = False):
+    """ShapeDtypeStruct tree -> NamedSharding tree (for jit in_shardings)."""
+    rules = dict(_RULES)
+    if "pod" in mesh.axis_names:
+        rules["fsdp"] = ("pod", "data")
+        rules["batch"] = ("pod", "data")
+        rules["moe_group"] = ("pod", "data")
+
+    def one(path, leaf):
+        names = param_logical_axes(_path_str(path), len(leaf.shape), fsdp)
+        spec = []
+        used = set()
+        msizes = dict(zip(mesh.axis_names, mesh.shape.values()) if hasattr(mesh.shape, 'values') else zip(mesh.axis_names, mesh.axis_sizes))
+        for name, dim in zip(names, leaf.shape):
+            axes, size = [], 1
+            for ax in rules.get(name, ()) if name else ():
+                if ax in msizes and ax not in used and dim % (size * msizes[ax]) == 0:
+                    axes.append(ax)
+                    size *= msizes[ax]
+            used.update(axes)
+            spec.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the performance-critical compute of ADE-HGNN.
+
+Each package has ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd public wrapper) and ``ref.py`` (pure-jnp oracle). Kernels target TPU
+(VMEM tiling, MXU-aligned blocks, scalar-prefetch DMA gather) and are
+validated on CPU with ``interpret=True``.
+
+  * ``topk_select``           — the Pruner: streaming retention domain
+  * ``fused_prune_aggregate`` — ADE fused NA: prune + softmax + gather-aggregate
+  * ``topk_decode_attention`` — ADE technique applied to LM decode (KV top-K)
+"""

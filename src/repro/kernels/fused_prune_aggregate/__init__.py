@@ -1,0 +1,1 @@
+from repro.kernels.fused_prune_aggregate.ops import fused_prune_aggregate  # noqa: F401

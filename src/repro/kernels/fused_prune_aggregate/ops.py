@@ -1,0 +1,33 @@
+"""Public wrapper used by ``repro.core.attention.aggregate_fused``."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_prune_aggregate.kernel import fused_prune_aggregate_pallas
+
+
+def fused_prune_aggregate(
+    h_proj: jax.Array,  # (N, H, dh)
+    theta_src: jax.Array,  # (N, H)
+    theta_dst: jax.Array,  # (T, H)
+    nbr_idx: jax.Array,  # (T, D)
+    nbr_mask: jax.Array,  # (T, D)
+    theta_rel: Optional[jax.Array] = None,  # (R, H)
+    edge_type: Optional[jax.Array] = None,  # (T, D)
+    prune_k: Optional[int] = None,
+    slope: float = 0.2,
+    interpret: bool = True,
+) -> jax.Array:
+    # The scalar pass: θ_u* per edge slot. 4·H bytes/edge instead of the
+    # 4·H·dh bytes/edge feature row the staged flow gathers.
+    theta_g = theta_src[nbr_idx]
+    if theta_rel is not None and edge_type is not None:
+        theta_g = theta_g + theta_rel[edge_type]
+    k = prune_k if prune_k is not None else nbr_idx.shape[1]
+    return fused_prune_aggregate_pallas(
+        theta_g, nbr_mask, theta_dst, nbr_idx, h_proj,
+        prune_k=k, slope=slope, interpret=interpret,
+    )

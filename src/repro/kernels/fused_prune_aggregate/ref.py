@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused prune+aggregate kernel (= staged pruned
+flow with Algorithm-1 tie semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG
+
+
+def fused_prune_aggregate_ref(
+    theta_g, mask, theta_dst, nbr_idx, h_proj, prune_k, slope=0.2
+):
+    t, d, h = theta_g.shape
+    rank = jnp.where(mask != 0, theta_g.sum(-1), NEG)  # (T, D)
+    k = min(prune_k, d)
+    _, slot = jax.lax.top_k(rank, k)  # first-arrival ties
+    keep = jnp.zeros((t, d), bool).at[jnp.arange(t)[:, None], slot].set(True)
+    keep &= mask != 0
+    theta = theta_g + theta_dst[:, None, :]
+    theta = jnp.where(theta >= 0, theta, slope * theta)
+    theta = jnp.where(keep[..., None], theta, NEG)
+    mx = jnp.max(theta, axis=1, keepdims=True)
+    ex = jnp.where(keep[..., None], jnp.exp(theta - mx), 0.0)
+    alpha = ex / (ex.sum(axis=1, keepdims=True) + 1e-30)
+    feats = h_proj[nbr_idx]  # (T, D, H, dh)
+    return jnp.einsum("tdh,tdhf->thf", alpha, feats)

@@ -1,0 +1,1 @@
+from repro.kernels.topk_decode_attention.ops import topk_decode_attention  # noqa: F401

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle: exact top-K pruned decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG
+
+
+def topk_decode_attention_ref(q, k_cache, v_cache, lengths, prune_k, scale=None):
+    b, h, dh = q.shape
+    _, s, hkv, _ = k_cache.shape
+    group = h // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    kx = jnp.repeat(k_cache, group, axis=2)  # (B, S, H, dh)
+    vx = jnp.repeat(v_cache, group, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", q, kx) * scale
+    pos = jnp.arange(s)[None, None, :]
+    logits = jnp.where(pos < lengths[:, None, None], logits, NEG)
+    kk = min(prune_k, s)
+    vals, _ = jax.lax.top_k(logits, kk)
+    thresh = vals[..., -1:]
+    keep = (logits >= thresh) & (pos < lengths[:, None, None])
+    # exact-k tie handling: if ties at the threshold exceed k, keep earliest
+    cum = jnp.cumsum(keep, axis=-1)
+    keep &= cum <= kk
+    lg = jnp.where(keep, logits, NEG)
+    mx = jnp.max(lg, axis=-1, keepdims=True)
+    ex = jnp.where(keep, jnp.exp(lg - mx), 0.0)
+    alpha = ex / (ex.sum(-1, keepdims=True) + 1e-30)
+    return jnp.einsum("bhs,bshd->bhd", alpha, vx)
+
+
+def full_decode_attention_ref(q, k_cache, v_cache, lengths, scale=None):
+    """Unpruned baseline (what pruning is measured against)."""
+    b, h, dh = q.shape
+    _, s, hkv, _ = k_cache.shape
+    group = h // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    kx = jnp.repeat(k_cache, group, axis=2)
+    vx = jnp.repeat(v_cache, group, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", q, kx) * scale
+    pos = jnp.arange(s)[None, None, :]
+    logits = jnp.where(pos < lengths[:, None, None], logits, NEG)
+    alpha = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", alpha, vx)

@@ -1,0 +1,1 @@
+from repro.kernels.topk_select.ops import topk_select  # noqa: F401

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the Pruner."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG
+
+
+def topk_select_ref(scores, mask, k):
+    """Returns (values desc, slot ids) of the top-k valid scores per row;
+    ids of empty slots are -1. Ties keep the earliest slot (Algorithm 1)."""
+    s = jnp.where(mask != 0, scores.astype(jnp.float32), NEG)
+    vals, ids = jax.lax.top_k(s, k)
+    ids = jnp.where(vals <= NEG / 2, -1, ids)
+    return vals, ids

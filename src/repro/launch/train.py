@@ -1,0 +1,53 @@
+"""Training launcher.
+
+Single-process CPU by default (smoke configs); on a real cluster each host
+runs this under its own jax.distributed initialization with the production
+mesh. Fault tolerance lives in repro.runtime.Trainer: auto-resume from the
+latest committed checkpoint, async saves, step retries, straggler watch.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+        --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.runtime import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tcfg = TrainConfig(
+        steps=args.steps, seq_len=args.seq_len, global_batch=args.global_batch,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, seed=args.seed,
+    )
+    trainer = Trainer(cfg, tcfg)
+    ctx_fn = None
+    if cfg.num_img_tokens or cfg.num_audio_frames:
+        n = cfg.num_img_tokens or cfg.num_audio_frames
+
+        def ctx_fn(step):
+            return jax.random.normal(
+                jax.random.PRNGKey(step), (args.global_batch, n, cfg.d_model)
+            )
+
+    _, _, losses = trainer.run(context_fn=ctx_fn)
+    print(f"[train] done: first loss {losses[0]:.4f} last loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""LM substrate layers (pure-functional init/apply pairs)."""

@@ -1,0 +1,241 @@
+"""GQA attention: flash-chunked training/prefill path, cached decode path
+with optional ADE top-K KV pruning (the paper's technique on LM serving),
+sliding-window variants with ring-buffer caches, and cross-attention.
+
+The training path never materializes the (S, S) logit matrix: an outer
+`lax.scan` over query chunks and an inner online-softmax scan over KV chunks
+bound live memory to O(chunk² ) per head — required for the 32k-prefill
+shape. Sliding-window layers slice the KV stream to a static
+(window + chunk) span per query chunk, so HLO FLOPs scale with the window,
+not the sequence (this matters for roofline honesty on gemma3/griffin).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projection import glorot
+from repro.distributed.sharding import constrain
+from repro.layers.flash import flash_attention
+from repro.layers.rope import apply_rope, rope_angles
+
+NEG = -2.3e38
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, C, Hkv, hd) — C = max len (global) or window (local)
+    v: jax.Array
+
+
+def init_attention(key, cfg, cross: bool = False):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": glorot(ks[0], (d, h * hd)),
+        "wk": glorot(ks[1], (d, hkv * hd)),
+        "wv": glorot(ks[2], (d, hkv * hd)),
+        "wo": glorot(ks[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,))
+        p["bk"] = jnp.zeros((hkv * hd,))
+        p["bv"] = jnp.zeros((hkv * hd,))
+    if cross:
+        p["gate"] = jnp.zeros(())  # llama-vision gated cross-attention
+    return p
+
+
+def _project_qkv(cfg, params, x, kv_x):
+    dt = cfg.adtype
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = x.astype(dt) @ params["wq"].astype(dt)
+    k = kv_x.astype(dt) @ params["wk"].astype(dt)
+    v = kv_x.astype(dt) @ params["wv"].astype(dt)
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, kv_x.shape[1], hkv, hd)
+    v = v.reshape(b, kv_x.shape[1], hkv, hd)
+    return q, k, v
+
+
+def attention_train(
+    cfg, params, x, positions,
+    kind: str = "A",  # A=global, L=local sliding window
+    context: Optional[jax.Array] = None,  # cross-attn K/V source
+    emit_cache: bool = False,
+    causal: Optional[bool] = None,
+):
+    """Full-sequence attention (train / prefill)."""
+    cross = context is not None
+    if causal is None:
+        causal = not cross
+    kv_x = context if cross else x
+    q, k, v = _project_qkv(cfg, params, x, kv_x)
+    if not cross:
+        base = cfg.rope_base
+        if kind == "L" and cfg.rope_local_base is not None:
+            base = cfg.rope_local_base
+        rot = int(cfg.hd * cfg.rope_fraction)
+        cos, sin = rope_angles(positions, rot, base)
+        q = apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    window = cfg.sliding_window if kind == "L" else None
+    o = flash_attention(cfg, q, k, v, causal=causal, window=window)
+    o = constrain(o, "batch", "seq", "heads", None)
+    out = o.reshape(x.shape[0], x.shape[1], -1) @ params["wo"].astype(cfg.adtype)
+    if "gate" in params:  # gated cross-attention (llama-vision)
+        out = out * jnp.tanh(params["gate"]).astype(out.dtype)
+    cache = KVCache(k=k, v=v) if emit_cache else None
+    return out.astype(x.dtype), cache
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, kind: str):
+    hkv, hd = cfg.num_kv_heads, cfg.hd
+    c = max_len
+    if kind == "L" and cfg.sliding_window is not None:
+        c = min(max_len, cfg.sliding_window)
+    return KVCache(
+        k=jnp.zeros((batch, c, hkv, hd), cfg.adtype),
+        v=jnp.zeros((batch, c, hkv, hd), cfg.adtype),
+    )
+
+
+def _hier_topk(logits, prune_k: int, c: int):
+    """Distributed retention domain (§Perf): shard-local top-K over the
+    cache_seq shards, then a global merge over the n_shards·K candidate set.
+    The local pass is comm-free under GSPMD because the reshape dimension
+    aligns with the cache_seq sharding; the merge gathers only candidates
+    (n_sh·K values) instead of the full (B,H,S) logits. Exact — same result
+    as a global top-K (the true top-K of a union is within the per-shard
+    top-Ks)."""
+    from repro.distributed.sharding import _RULES, _mesh_axes
+
+    axes = _RULES.get("cache_seq", ())
+    mesh = _mesh_axes()
+    n_sh = 1
+    for ax in axes:
+        if ax in mesh and c % (n_sh * mesh[ax]) == 0:
+            n_sh *= mesh[ax]
+    if n_sh <= 1 or c // n_sh < prune_k:
+        return jax.lax.top_k(logits, prune_k)
+    b, hkv, g, _ = logits.shape
+    lg = logits.reshape(b, hkv, g, n_sh, c // n_sh)
+    lv, li = jax.lax.top_k(lg, prune_k)  # shard-local
+    gi = li + (jnp.arange(n_sh) * (c // n_sh))[None, None, None, :, None]
+    cand_v = lv.reshape(b, hkv, g, n_sh * prune_k)
+    cand_i = gi.reshape(b, hkv, g, n_sh * prune_k)
+    top_vals, sel = jax.lax.top_k(cand_v, prune_k)
+    top_idx = jnp.take_along_axis(cand_i, sel, axis=-1)
+    return top_vals, top_idx
+
+
+def attention_decode(
+    cfg, params, x, pos, cache: KVCache,
+    kind: str = "A",
+):
+    """Single-token decode with cache update.
+
+    Global layers ('A') support ADE top-K KV pruning (cfg.attn_prune_k):
+    per-query-head top-K retention over q·k logits before softmax·V — the
+    paper's attention-disparity pruning with the KV cache as neighbor set.
+    Local layers ('L') use a ring-buffer cache of window width.
+    """
+    b = x.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q, k, v = _project_qkv(cfg, params, x, x)
+    base = cfg.rope_base
+    if kind == "L" and cfg.rope_local_base is not None:
+        base = cfg.rope_local_base
+    rot = int(cfg.hd * cfg.rope_fraction)
+    posv = jnp.full((b, 1), pos)
+    cos, sin = rope_angles(posv, rot, base)
+    q = apply_rope(q, cos, sin, cfg.rope_fraction)
+    k = apply_rope(k, cos, sin, cfg.rope_fraction)
+
+    c = cache.k.shape[1]
+    slot = pos % c  # ring for local; c >= max_len for global so pos % c = pos
+    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+    ck = constrain(ck, "batch", "cache_seq", None, None)
+    cv = constrain(cv, "batch", "cache_seq", None, None)
+
+    # absolute position held by each ring slot j: pos - ((pos - j) mod c)
+    idx = jnp.arange(c)
+    abs_pos = pos - jnp.mod(pos - idx, c)
+    valid = abs_pos >= 0
+    if kind == "L" and cfg.sliding_window is not None:
+        valid &= abs_pos > pos - cfg.sliding_window
+
+    scale = hd ** -0.5
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, ck).astype(jnp.float32) * scale
+    logits = jnp.where(valid[None, None, None, :], logits, NEG)
+
+    prune_k = cfg.attn_prune_k if kind == "A" else None
+    if prune_k is not None and prune_k < c:
+        # ADE: retain the top-K coefficients per head (paper Algorithm 1).
+        # Distributed form: find the K-th logit (threshold), mask, and do a
+        # *dense* weighted sum — the weighted aggregation happens before the
+        # cross-shard collective, so only the (B,H,hd) result is psummed.
+        # (An index-gather formulation all-reduces the gathered (B,H,K,hd)
+        # rows and materializes giant s32 index tensors — measured 13 GB of
+        # collectives per step on gemma3/decode_32k; see EXPERIMENTS §Perf.)
+        # The per-chip V-read saving of pruning is delivered by the Pallas
+        # kernel (kernels/topk_decode_attention) within each shard.
+        if cfg.hier_topk:
+            top_vals, _ = _hier_topk(logits, prune_k, c)
+        else:
+            top_vals, _ = jax.lax.top_k(logits, prune_k)  # (B,Hkv,g,K)
+        thresh = top_vals[..., -1:]
+        keep = logits >= thresh
+        lg = jnp.where(keep, logits, NEG)
+        alpha = jax.nn.softmax(lg, axis=-1)
+        alpha = jnp.where(keep, alpha, 0.0).astype(cv.dtype)
+        o = jnp.einsum("bkgs,bskd->bkgd", alpha, cv)
+    else:
+        alpha = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
+        o = jnp.einsum("bkgs,bskd->bkgd", alpha, cv)
+    o = o.reshape(b, 1, h * hd)
+    out = o @ params["wo"].astype(cfg.adtype)
+    return out.astype(x.dtype), KVCache(k=ck, v=cv)
+
+
+def cross_attention_decode(cfg, params, x, cache: KVCache):
+    """Decode-time cross-attention against a static context cache, with
+    optional ADE pruning (image/audio tokens as the neighbor set)."""
+    b = x.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = cfg.adtype
+    q = (x.astype(dt) @ params["wq"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+    q = q.reshape(b, 1, h, hd)
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, cache.k).astype(jnp.float32) * scale
+    if cfg.attn_prune_k is not None and cfg.attn_prune_k < cache.k.shape[1]:
+        top_vals, top_idx = jax.lax.top_k(logits, cfg.attn_prune_k)
+        alpha = jax.nn.softmax(top_vals, -1).astype(dt)
+        cvt = cache.v.transpose(0, 2, 1, 3)  # (B,Hkv,C,hd)
+        idxg = top_idx.reshape(b, hkv, -1)
+        rows = jnp.take_along_axis(cvt, idxg[..., None].repeat(hd, -1), axis=2)
+        rows = rows.reshape(b, hkv, g, cfg.attn_prune_k, hd)
+        o = jnp.einsum("bkgs,bkgsd->bkgd", alpha, rows)
+    else:
+        alpha = jax.nn.softmax(logits, -1).astype(dt)
+        o = jnp.einsum("bkgs,bskd->bkgd", alpha, cache.v)
+    out = o.reshape(b, 1, h * hd) @ params["wo"].astype(dt)
+    if "gate" in params:
+        out = out * jnp.tanh(params["gate"]).astype(out.dtype)
+    return out.astype(x.dtype)

@@ -1,0 +1,198 @@
+"""Layer blocks: init / train-apply / decode-apply, dispatched by kind.
+
+Kinds:
+  A  global attention + MLP            L  sliding-window attention + MLP
+  M  attention + MoE (opt. dense res)  C  gated cross-attention + MLP
+  R  RG-LRU recurrent + MLP            W  RWKV-6 time-mix + channel-mix
+  E  encoder (bidirectional) attn+MLP  D  decoder self+cross+MLP (enc-dec)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn
+from repro.layers import mlp as mlp_mod
+from repro.layers import moe as moe_mod
+from repro.layers import rglru, rwkv
+from repro.layers.norms import apply_norm, init_norm
+
+
+def init_block(key, cfg, kind: str):
+    ks = jax.random.split(key, 8)
+    p = {"ln1": init_norm(cfg), "ln2": init_norm(cfg)}
+    if kind in ("A", "L", "E"):
+        p["attn"] = attn.init_attention(ks[0], cfg)
+        p["mlp"] = mlp_mod.init_mlp(ks[1], cfg)
+    elif kind == "M":
+        p["attn"] = attn.init_attention(ks[0], cfg)
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+        if cfg.moe.dense_residual:
+            p["mlp"] = mlp_mod.init_mlp(ks[2], cfg)
+    elif kind == "C":
+        p["cross"] = attn.init_attention(ks[0], cfg, cross=True)
+        p["mlp"] = mlp_mod.init_mlp(ks[1], cfg)
+    elif kind == "R":
+        p["lru"] = rglru.init_recurrent(ks[0], cfg)
+        p["mlp"] = mlp_mod.init_mlp(ks[1], cfg)
+    elif kind == "W":
+        p["rwkv"] = rwkv.init_rwkv(ks[0], cfg)
+    elif kind == "D":
+        p["attn"] = attn.init_attention(ks[0], cfg)
+        p["lnx"] = init_norm(cfg)
+        p["cross"] = attn.init_attention(ks[1], cfg, cross=True)
+        p["mlp"] = mlp_mod.init_mlp(ks[2], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def apply_block_train(
+    cfg, kind: str, params, x, positions,
+    context: Optional[jax.Array] = None,
+    emit_cache: bool = False,
+):
+    """Returns (x, aux_loss, cache_or_state_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind in ("A", "L", "E"):
+        h, cache = attn.attention_train(
+            cfg, params["attn"], apply_norm(cfg, params["ln1"], x), positions,
+            kind=("A" if kind == "E" else kind),
+            emit_cache=emit_cache and kind != "E",
+            causal=(False if kind == "E" else None),
+        )
+        x = x + h
+        x = x + mlp_mod.apply_mlp(cfg, params["mlp"], apply_norm(cfg, params["ln2"], x))
+    elif kind == "M":
+        h, cache = attn.attention_train(
+            cfg, params["attn"], apply_norm(cfg, params["ln1"], x), positions,
+            kind="A", emit_cache=emit_cache,
+        )
+        x = x + h
+        hn = apply_norm(cfg, params["ln2"], x)
+        mo, aux = moe_mod.apply_moe(cfg, params["moe"], hn)
+        if "mlp" in params:
+            mo = mo + mlp_mod.apply_mlp(cfg, params["mlp"], hn)
+        x = x + mo
+    elif kind == "C":
+        h, cache = attn.attention_train(
+            cfg, params["cross"], apply_norm(cfg, params["ln1"], x), positions,
+            context=context, emit_cache=emit_cache,
+        )
+        x = x + h
+        x = x + mlp_mod.apply_mlp(cfg, params["mlp"], apply_norm(cfg, params["ln2"], x))
+    elif kind == "R":
+        hn = apply_norm(cfg, params["ln1"], x)
+        if emit_cache:
+            h, cache = rglru.apply_recurrent_train(cfg, params["lru"], hn, emit_state=True)
+        else:
+            h = rglru.apply_recurrent_train(cfg, params["lru"], hn)
+        x = x + h
+        x = x + mlp_mod.apply_mlp(cfg, params["mlp"], apply_norm(cfg, params["ln2"], x))
+    elif kind == "W":
+        h1n = apply_norm(cfg, params["ln1"], x)
+        if emit_cache:
+            h, s_final = rwkv.time_mix_train(cfg, params["rwkv"], h1n, emit_state=True)
+        else:
+            h = rwkv.time_mix_train(cfg, params["rwkv"], h1n)
+        x = x + h
+        h2n = apply_norm(cfg, params["ln2"], x)
+        x = x + rwkv.channel_mix_train(cfg, params["rwkv"], h2n)
+        if emit_cache:
+            cache = rwkv.RWKVState(s=s_final, shift_t=h1n[:, -1], shift_c=h2n[:, -1])
+    elif kind == "D":
+        h, self_cache = attn.attention_train(
+            cfg, params["attn"], apply_norm(cfg, params["ln1"], x), positions,
+            kind="A", emit_cache=emit_cache,
+        )
+        x = x + h
+        hc, cross_cache = attn.attention_train(
+            cfg, params["cross"], apply_norm(cfg, params["lnx"], x), positions,
+            context=context, emit_cache=emit_cache,
+        )
+        x = x + hc
+        x = x + mlp_mod.apply_mlp(cfg, params["mlp"], apply_norm(cfg, params["ln2"], x))
+        if emit_cache:
+            cache = {"self": self_cache, "cross": cross_cache}
+    else:
+        raise ValueError(kind)
+    return x, aux, cache
+
+
+def init_block_cache(cfg, kind: str, batch: int, max_len: int, ctx_len: int = 0):
+    if kind in ("A", "M"):
+        return attn.init_kv_cache(cfg, batch, max_len, "A")
+    if kind == "L":
+        return attn.init_kv_cache(cfg, batch, max_len, "L")
+    if kind == "C":
+        return attn.init_kv_cache(cfg, batch, ctx_len, "A")
+    if kind == "D":
+        return {
+            "self": attn.init_kv_cache(cfg, batch, max_len, "A"),
+            "cross": attn.init_kv_cache(cfg, batch, ctx_len, "A"),
+        }
+    if kind == "R":
+        return rglru.init_lru_state(cfg, batch)
+    if kind == "W":
+        return rwkv.init_rwkv_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def apply_block_decode(cfg, kind: str, params, x, pos, cache):
+    """Single-token step. Returns (x, new_cache)."""
+    if kind in ("A", "L"):
+        h, cache = attn.attention_decode(
+            cfg, params["attn"], apply_norm(cfg, params["ln1"], x), pos, cache, kind=kind
+        )
+        x = x + h
+        x = x + mlp_mod.apply_mlp(cfg, params["mlp"], apply_norm(cfg, params["ln2"], x))
+    elif kind == "M":
+        h, cache = attn.attention_decode(
+            cfg, params["attn"], apply_norm(cfg, params["ln1"], x), pos, cache, kind="A"
+        )
+        x = x + h
+        hn = apply_norm(cfg, params["ln2"], x)
+        mo, _ = moe_mod.apply_moe(cfg, params["moe"], hn)
+        if "mlp" in params:
+            mo = mo + mlp_mod.apply_mlp(cfg, params["mlp"], hn)
+        x = x + mo
+    elif kind == "C":
+        h = attn.cross_attention_decode(
+            cfg, params["cross"], apply_norm(cfg, params["ln1"], x), cache
+        )
+        x = x + h
+        x = x + mlp_mod.apply_mlp(cfg, params["mlp"], apply_norm(cfg, params["ln2"], x))
+    elif kind == "D":
+        h, new_self = attn.attention_decode(
+            cfg, params["attn"], apply_norm(cfg, params["ln1"], x), pos, cache["self"], kind="A"
+        )
+        x = x + h
+        hc = attn.cross_attention_decode(
+            cfg, params["cross"], apply_norm(cfg, params["lnx"], x), cache["cross"]
+        )
+        x = x + hc
+        x = x + mlp_mod.apply_mlp(cfg, params["mlp"], apply_norm(cfg, params["ln2"], x))
+        cache = {"self": new_self, "cross": cache["cross"]}
+    elif kind == "R":
+        h, cache = rglru.apply_recurrent_decode(
+            cfg, params["lru"], apply_norm(cfg, params["ln1"], x), cache
+        )
+        x = x + h
+        x = x + mlp_mod.apply_mlp(cfg, params["mlp"], apply_norm(cfg, params["ln2"], x))
+    elif kind == "W":
+        h, s_new, shift_t = rwkv.time_mix_decode(
+            cfg, params["rwkv"], apply_norm(cfg, params["ln1"], x),
+            cache,
+        )
+        x = x + h
+        h2, shift_c = rwkv.channel_mix_decode(
+            cfg, params["rwkv"], apply_norm(cfg, params["ln2"], x), cache
+        )
+        x = x + h2
+        cache = rwkv.RWKVState(s=s_new, shift_t=shift_t, shift_c=shift_c)
+    else:
+        raise ValueError(kind)
+    return x, cache

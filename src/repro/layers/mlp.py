@@ -1,0 +1,33 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / vanilla GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projection import glorot
+from repro.distributed.sharding import constrain
+
+
+def init_mlp(key, cfg, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wi": glorot(k1, (d, f)), "wo": glorot(k3, (f, d))}
+    if cfg.activation in ("swiglu", "geglu"):
+        p["wg"] = glorot(k2, (d, f))
+    return p
+
+
+def apply_mlp(cfg, params, x):
+    dt = cfg.adtype
+    h = x.astype(dt) @ params["wi"].astype(dt)
+    if cfg.activation == "swiglu":
+        g = x.astype(dt) @ params["wg"].astype(dt)
+        h = jax.nn.silu(g) * h
+    elif cfg.activation == "geglu":
+        g = x.astype(dt) @ params["wg"].astype(dt)
+        h = jax.nn.gelu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", "seq", "ffn")
+    return (h @ params["wo"].astype(dt)).astype(x.dtype)

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts with GShard-style einsum dispatch.
+
+Tokens are grouped into (G, Sg) dispatch groups; experts are sharded over
+the model axis (EP), groups over the data axes — the dispatch/combine
+einsums then partition without resharding the token stream, and the
+expert-contraction psum is the only added collective (same pattern as TP
+FFN). Capacity per group keeps the dispatch one-hot small:
+C = ceil(Sg·topk/E·cf); overflow tokens are dropped (standard GShard).
+
+Top-K routing reuses the ADE retention-domain idea in spirit — both are
+runtime top-K selections of a weighted aggregation set; here K is tiny so a
+sequential argmax loop is cheapest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projection import glorot
+from repro.distributed.sharding import constrain
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_d_ff, m.num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": {"w": glorot(ks[0], (d, e))},
+        "experts": {
+            "wi": glorot(ks[1], (e, d, f)),
+            "wg": glorot(ks[2], (e, d, f)),
+            "wo": glorot(ks[3], (e, f, d)),
+        },
+    }
+    return p
+
+
+def _topk_dispatch(probs, top_k: int, capacity: int):
+    """probs (G,S,E) -> dispatch (G,S,E,C) 0/1, combine (G,S,E,C) weights."""
+    g, s, e = probs.shape
+    remaining = probs
+    counts = jnp.zeros((g, 1, e), probs.dtype)
+    dispatch = jnp.zeros((g, s, e, capacity), probs.dtype)
+    gate_sum = jnp.zeros((g, s), probs.dtype)
+    combine = jnp.zeros((g, s, e, capacity), probs.dtype)
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)  # (G,S)
+        mask = jax.nn.one_hot(idx, e, dtype=probs.dtype)  # (G,S,E)
+        gate = (probs * mask).sum(-1)  # (G,S)
+        pos = jnp.cumsum(mask, axis=1) - mask + counts  # (G,S,E)
+        pos_tok = (pos * mask).sum(-1)  # (G,S)
+        keep = (pos_tok < capacity).astype(probs.dtype)
+        oh_c = jax.nn.one_hot(pos_tok, capacity, dtype=probs.dtype)
+        slotted = mask[..., None] * oh_c[:, :, None, :] * keep[..., None, None]
+        dispatch = dispatch + slotted
+        combine = combine + gate[..., None, None] * slotted
+        gate_sum = gate_sum + gate * keep
+        counts = counts + mask.sum(axis=1, keepdims=True)
+        remaining = remaining * (1.0 - mask)
+    combine = combine / jnp.maximum(gate_sum, 1e-9)[..., None, None]
+    return dispatch, combine
+
+
+def apply_moe(cfg, params, x):
+    """x (B,S,d) -> (y (B,S,d), aux_loss scalar)."""
+    m = cfg.moe
+    dt = cfg.adtype
+    b, s, d = x.shape
+    sg = min(m.group_size, b * s)
+    tokens = x.reshape(-1, d)
+    pad = (-tokens.shape[0]) % sg
+    if pad:  # pad to a full dispatch group; padded rows are sliced off below
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    ng = tokens.shape[0] // sg
+    xs = tokens.reshape(ng, sg, d)
+    xs = constrain(xs, "moe_group", None, None)
+
+    logits = (xs.astype(jnp.float32) @ params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (G,S,E) f32
+
+    cap = int(sg * m.top_k / m.num_experts * m.capacity_factor + 0.5)
+    cap = max(cap, m.top_k)
+    dispatch, combine = _topk_dispatch(probs, m.top_k, cap)
+    dispatch = constrain(dispatch.astype(dt), "moe_group", None, "experts", None)
+    combine = constrain(combine.astype(dt), "moe_group", None, "experts", None)
+
+    # dispatch tokens to expert buffers: (E, G, C, d)
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xs.astype(dt))
+    xe = constrain(xe, "experts", "moe_group", None, None)
+    wi = params["experts"]["wi"].astype(dt)
+    wg = params["experts"]["wg"].astype(dt)
+    wo = params["experts"]["wo"].astype(dt)
+    h = jnp.einsum("egcd,edf->egcf", xe, wi)
+    gsig = jnp.einsum("egcd,edf->egcf", xe, wg)
+    h = jax.nn.silu(gsig) * h
+    h = constrain(h, "experts", "moe_group", None, "ffn")
+    ye = jnp.einsum("egcf,efd->egcd", h, wo)
+    y = jnp.einsum("gsec,egcd->gsd", combine, ye)
+    y = y.reshape(-1, d)
+    if pad:
+        y = y[: b * s]
+
+    # GShard load-balance aux + router z-loss
+    me = probs.mean(axis=(0, 1))  # (E,)
+    ce = dispatch.astype(jnp.float32).sum(-1).mean(axis=(0, 1)) * (
+        m.num_experts / m.top_k
+    )
+    lb_loss = m.num_experts * jnp.sum(me * ce)
+    z_loss = m.router_z_loss * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1))
+    )
+    return y.reshape(b, s, d).astype(x.dtype), lb_loss + z_loss

@@ -1,0 +1,52 @@
+"""Normalization layers (computed in f32, cast back to activation dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.zeros((d,))}  # gemma-style (1+scale) parameterization
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+def init_norm(cfg):
+    return init_rmsnorm(cfg.d_model) if cfg.norm == "rmsnorm" else init_layernorm(cfg.d_model)
+
+
+def apply_norm(cfg, params, x):
+    return rmsnorm(params, x) if cfg.norm == "rmsnorm" else layernorm(params, x)
+
+
+def init_groupnorm(d: int):
+    return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+
+
+def groupnorm_heads(params, x, eps: float = 1e-5):
+    """Per-head LayerNorm for RWKV time-mix output: x (..., H, hs)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = x32.var(-1, keepdims=True)
+    y = (x32 - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    flat = y.reshape(y.shape[:-2] + (-1,))
+    return (flat * params["scale"] + params["bias"]).astype(dt)

@@ -1,0 +1,106 @@
+"""Griffin recurrent block: temporal conv + RG-LRU (recurrentgemma).
+
+Training runs the diagonal affine recurrence h_t = a_t·h_{t-1} + b_t with
+`jax.lax.associative_scan` (log-depth on TPU); decode is a single-step
+update carrying (h, conv window) state. The paper's pruning technique has
+no aggregation set here and is not applied (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projection import glorot
+from repro.distributed.sharding import constrain
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin)
+
+
+class LRUState(NamedTuple):
+    h: jax.Array  # (B, W)
+    conv: jax.Array  # (B, conv_width-1, W)
+
+
+def init_recurrent(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": glorot(ks[0], (d, w)),
+        "wgate": glorot(ks[1], (d, w)),
+        "conv_w": glorot(ks[2], (cfg.conv_width, w)) * 0.1,
+        "conv_b": jnp.zeros((w,)),
+        "wa": glorot(ks[3], (w, w)),
+        "ba": jnp.full((w,), 4.0),  # sigmoid(4) ≈ 0.98: slow-decay init
+        "wi": glorot(ks[4], (w, w)),
+        "bi": jnp.zeros((w,)),
+        "lam": jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, w)) + 1e-8),
+        "w_out": glorot(ks[5], (w, d)),
+    }
+
+
+def _gates(params, c, dt):
+    r = jax.nn.sigmoid(c @ params["wa"].astype(dt) + params["ba"].astype(dt))
+    i = jax.nn.sigmoid(c @ params["wi"].astype(dt) + params["bi"].astype(dt))
+    log_a = (-_C * jax.nn.softplus(params["lam"].astype(jnp.float32))) * r.astype(
+        jnp.float32
+    )
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, (beta * (i * c).astype(jnp.float32))
+
+
+def apply_recurrent_train(cfg, params, x, emit_state: bool = False):
+    """x (B,S,d) -> (B,S,d) [, final LRUState]."""
+    dt = cfg.adtype
+    b, s, d = x.shape
+    u = x.astype(dt) @ params["wx"].astype(dt)  # (B,S,W)
+    g = jax.nn.gelu(x.astype(dt) @ params["wgate"].astype(dt))
+    u = constrain(u, "batch", "seq", "lru")
+    # causal depthwise conv, width cw
+    cw = cfg.conv_width
+    pads = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    c = sum(
+        pads[:, i: i + s, :] * params["conv_w"][i].astype(dt) for i in range(cw)
+    ) + params["conv_b"].astype(dt)
+    a, bterm = _gates(params, c, dt)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    out = (h.astype(dt) * g) @ params["w_out"].astype(dt)
+    if emit_state:
+        state = LRUState(h=h[:, -1].astype(jnp.float32), conv=u[:, s - cw + 1:, :])
+        return out.astype(x.dtype), state
+    return out.astype(x.dtype)
+
+
+def init_lru_state(cfg, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return LRUState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, w), cfg.adtype),
+    )
+
+
+def apply_recurrent_decode(cfg, params, x, state: LRUState):
+    """x (B,1,d) single step."""
+    dt = cfg.adtype
+    b = x.shape[0]
+    u = (x[:, 0].astype(dt)) @ params["wx"].astype(dt)  # (B,W)
+    g = jax.nn.gelu(x[:, 0].astype(dt) @ params["wgate"].astype(dt))
+    hist = jnp.concatenate([state.conv, u[:, None, :]], axis=1)  # (B,cw,W)
+    c = (
+        jnp.einsum("bcw,cw->bw", hist.astype(dt), params["conv_w"].astype(dt))
+        + params["conv_b"].astype(dt)
+    )
+    a, bterm = _gates(params, c, dt)
+    h = a * state.h + bterm
+    out = (h.astype(dt) * g) @ params["w_out"].astype(dt)
+    new_state = LRUState(h=h, conv=hist[:, 1:, :])
+    return out[:, None, :].astype(x.dtype), new_state

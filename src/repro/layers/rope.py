@@ -1,0 +1,29 @@
+"""Rotary position embeddings with partial-rotary ("2d", chatglm3) and
+per-layer-kind base (gemma3 local/global) support."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions, rot_dim: int, base: float):
+    """positions (...,) -> (cos, sin) of shape (..., rot_dim//2)."""
+    inv = base ** (-jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, fraction: float = 1.0):
+    """x (..., S, H, hd); cos/sin (..., S, rot/2) broadcast over heads.
+
+    Half-split convention on the first ``fraction`` of head dims; the rest
+    pass through (chatglm3's 2D RoPE rotates only half the dims).
+    """
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s, xp], axis=-1)
+    return out

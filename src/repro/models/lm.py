@@ -1,0 +1,332 @@
+"""Composable language model assembled from layer blocks.
+
+Covers every assigned family:
+  dense / moe / hybrid / ssm — decoder-only over the block cycle;
+  vlm   — decoder-only with interleaved gated cross-attn ('C') layers
+          attending to stub image-patch embeddings;
+  audio — encoder-decoder: 'E' encoder blocks over stub frame embeddings,
+          'D' decoder blocks (self + cross) over text tokens.
+
+Layer stacks run under `lax.scan` over cycle repetitions (HLO depth O(1))
+with optional `jax.checkpoint` remat; parameters/caches are stacked per
+cycle position. Decode carries caches through the same scan as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.probe import xscan
+from repro.distributed.sharding import constrain
+from repro.layers import blocks
+from repro.layers.attention import KVCache
+
+
+def _stack_init(key, cfg, kind: str, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: blocks.init_block(k, cfg, kind))(keys)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.groups = cfg.layer_groups()
+
+    # ------------------------------------------------------------- init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_embed, k_layers, k_head, k_enc = jax.random.split(key, 4)
+        params: Dict[str, Any] = {
+            "embed": {
+                "table": (
+                    jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model)) * 0.02
+                ).astype(cfg.pdtype)
+            },
+            "groups": [],
+            "final_norm": blocks.init_norm(cfg),
+        }
+        for gi, (cycle, n) in enumerate(self.groups):
+            kg = jax.random.fold_in(k_layers, gi)
+            params["groups"].append(
+                tuple(
+                    _stack_init(jax.random.fold_in(kg, p), cfg, kind, n)
+                    for p, kind in enumerate(self._decoder_cycle(cycle))
+                )
+            )
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {
+                "w": (
+                    jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size)) * 0.02
+                ).astype(cfg.pdtype)
+            }
+        if cfg.family == "audio":
+            params["encoder"] = {
+                "stack": _stack_init(k_enc, cfg, "E", cfg.enc_layers),
+                "final_norm": blocks.init_norm(cfg),
+            }
+        return params
+
+    # --------------------------------------------------------- helpers
+    def _decoder_cycle(self, cycle):
+        # audio decoders turn 'A' blocks into 'D' (self+cross) blocks
+        if self.cfg.family == "audio":
+            return tuple("D" if k == "A" else k for k in cycle)
+        return cycle
+
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = params["embed"]["table"].astype(cfg.adtype)[tokens]
+        if cfg.tie_embeddings:  # gemma-style scaled embeddings
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.adtype)
+        return constrain(x, "batch", "seq", "embed")
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = blocks.apply_norm(cfg, params["final_norm"], x)
+        if cfg.tie_embeddings:
+            w = params["embed"]["table"].astype(cfg.adtype).T
+        else:
+            w = params["lm_head"]["w"].astype(cfg.adtype)
+        logits = (x @ w).astype(jnp.float32)
+        if cfg.logit_softcap:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        return constrain(logits, "batch", "seq", "vocab")
+
+    def _encode(self, params, frames):
+        """Audio encoder over stub frame embeddings (B, F, d)."""
+        cfg = self.cfg
+        x = frames.astype(cfg.adtype)
+        pos = jnp.arange(x.shape[1])
+
+        def body(carry, lp):
+            h, _, _ = blocks.apply_block_train(cfg, "E", lp, carry, pos)
+            return h, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = xscan(body, x, params["encoder"]["stack"])
+        return blocks.apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+    # ----------------------------------------------------------- train
+    def forward_train(
+        self,
+        params,
+        tokens: jax.Array,  # (B, S)
+        context: Optional[jax.Array] = None,  # img embeds / audio frames
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Returns (logits (B,S,V) f32, aux_loss scalar)."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            context = self._encode(params, context)
+        elif context is not None:
+            context = context.astype(cfg.adtype)
+        x = self._embed(params, tokens)
+        if cfg.seq_shard_activations:
+            x = constrain(x, "batch", "act_seq", "embed")
+        positions = jnp.arange(tokens.shape[1])
+        aux = jnp.zeros((), jnp.float32)
+
+        for gi, (cycle, n) in enumerate(self.groups):
+            cyc = self._decoder_cycle(cycle)
+            stacked = params["groups"][gi]
+
+            def body(carry, lps, cyc=cyc):
+                h, a = carry
+                for p, kind in enumerate(cyc):
+                    h, da, _ = blocks.apply_block_train(
+                        cfg, kind, lps[p], h, positions, context=context
+                    )
+                    a = a + da
+                if cfg.seq_shard_activations:
+                    h = constrain(h, "batch", "act_seq", "embed")
+                return (h, a), None
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            if cfg.scan_layers and n > 1:
+                (x, aux), _ = xscan(body, (x, aux), stacked)
+            else:
+                for i in range(n):
+                    lps = jax.tree.map(lambda t: t[i], stacked)
+                    (x, aux), _ = body((x, aux), lps)
+        return self._logits(params, x), aux
+
+    def loss_fn(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        logits, aux = self.forward_train(
+            params, batch["tokens"], context=batch.get("context")
+        )
+        labels = batch["labels"]
+        # vocab-sharded-friendly CE: no gather along the sharded vocab dim —
+        # the label pick is a masked reduction, which GSPMD turns into a
+        # partial sum + all-reduce instead of an all-gather of the logits.
+        m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+        shifted = logits - m
+        lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        pick = jnp.sum(
+            jnp.where(iota == labels[..., None], logits, 0.0), axis=-1
+        )
+        nll = lse - pick
+        return nll.mean() + aux
+
+    # ---------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        ctx_len = cfg.num_img_tokens or cfg.num_audio_frames
+        caches = []
+        for (cycle, n) in self.groups:
+            cyc = self._decoder_cycle(cycle)
+            caches.append(
+                tuple(
+                    jax.tree.map(
+                        lambda leaf: jnp.broadcast_to(
+                            leaf, (n,) + leaf.shape
+                        ).copy(),
+                        blocks.init_block_cache(cfg, kind, batch, max_len, ctx_len),
+                    )
+                    for kind in cyc
+                )
+            )
+        return caches
+
+    def decode_step(
+        self,
+        params,
+        token: jax.Array,  # (B, 1)
+        pos,  # scalar int: position being generated
+        cache,
+    ):
+        """One decode step. Returns (logits (B,V), new_cache)."""
+        cfg = self.cfg
+        x = self._embed(params, token)
+        new_caches = []
+        for gi, (cycle, n) in enumerate(self.groups):
+            cyc = self._decoder_cycle(cycle)
+            stacked = params["groups"][gi]
+            gcache = cache[gi]
+
+            def body(carry, xs, cyc=cyc):
+                h = carry
+                lps, cs = xs
+                new_cs = []
+                for p, kind in enumerate(cyc):
+                    h, nc = blocks.apply_block_decode(cfg, kind, lps[p], h, pos, cs[p])
+                    new_cs.append(nc)
+                return h, tuple(new_cs)
+
+            if cfg.scan_layers and n > 1:
+                x, new_gcache = xscan(body, x, (stacked, gcache))
+            else:
+                outs = []
+                for i in range(n):
+                    lps = jax.tree.map(lambda t: t[i], stacked)
+                    cs = jax.tree.map(lambda t: t[i], gcache)
+                    x, nc = body(x, (lps, cs))
+                    outs.append(nc)
+                new_gcache = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+            new_caches.append(new_gcache)
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_caches
+
+    # --------------------------------------------------------- prefill
+    def prefill(
+        self,
+        params,
+        tokens: jax.Array,  # (B, S)
+        max_len: int,
+        context: Optional[jax.Array] = None,
+    ):
+        """Run the full prompt, returning (last-token logits, decode cache).
+
+        Attention caches are emitted by the train-mode scan and re-laid-out
+        into the decode cache (global: left-aligned zero-padded to max_len;
+        local: last-`window` ring layout). Recurrent/ssm states come from a
+        short state-extraction pass.
+        """
+        cfg = self.cfg
+        b, s = tokens.shape
+        if cfg.family == "audio":
+            context = self._encode(params, context)
+        elif context is not None:
+            context = context.astype(cfg.adtype)
+        x = self._embed(params, tokens)
+        positions = jnp.arange(s)
+        caches = []
+
+        for gi, (cycle, n) in enumerate(self.groups):
+            cyc = self._decoder_cycle(cycle)
+            stacked = params["groups"][gi]
+
+            def body(carry, lps, cyc=cyc):
+                h = carry
+                emitted = []
+                for p, kind in enumerate(cyc):
+                    h, _, c = blocks.apply_block_train(
+                        cfg, kind, lps[p], h, positions,
+                        context=context, emit_cache=True,
+                    )
+                    emitted.append(c)
+                return h, tuple(emitted)
+
+            if cfg.scan_layers and n > 1:
+                x, emitted = xscan(body, x, stacked)
+            else:
+                outs = []
+                for i in range(n):
+                    lps = jax.tree.map(lambda t: t[i], stacked)
+                    x, em = body(x, lps)
+                    outs.append(em)
+                emitted = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+            caches.append(self._relayout_cache(cyc, emitted, s, max_len))
+
+        logits = self._logits(params, x[:, -1:, :])[:, 0]
+        return logits, caches
+
+    def _relayout_cache(self, cyc, emitted, s: int, max_len: int):
+        """Emitted per-position train caches -> decode cache layout."""
+        cfg = self.cfg
+        out = []
+        for p, kind in enumerate(cyc):
+            em = emitted[p]
+            if kind in ("A", "M"):
+                pad = max_len - s
+                out.append(
+                    KVCache(
+                        k=jnp.pad(em.k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                        v=jnp.pad(em.v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                    )
+                )
+            elif kind == "L":
+                w = min(cfg.sliding_window or s, max_len, s)
+                rows_k = em.k[:, :, s - w:, :, :]
+                rows_v = em.v[:, :, s - w:, :, :]
+                slots = jnp.mod(jnp.arange(s - w, s), w)
+                width = min(cfg.sliding_window or max_len, max_len)
+                zk = jnp.zeros(em.k.shape[:2] + (width,) + em.k.shape[3:], em.k.dtype)
+                zv = jnp.zeros_like(zk)
+                out.append(
+                    KVCache(
+                        k=zk.at[:, :, slots].set(rows_k),
+                        v=zv.at[:, :, slots].set(rows_v),
+                    )
+                )
+            elif kind in ("C",):
+                out.append(em)  # static context K/V
+            elif kind == "D":
+                pad = max_len - s
+                padkv = lambda c: KVCache(
+                    k=jnp.pad(c.k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                    v=jnp.pad(c.v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                )
+                out.append({"self": padkv(em["self"]), "cross": em["cross"]})
+            else:  # R / W states: emitted directly by the state pass
+                out.append(em)
+        return tuple(out)
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw  # noqa: F401
+from repro.optim.adafactor import adafactor  # noqa: F401
+from repro.optim.schedules import cosine_schedule, linear_warmup  # noqa: F401

@@ -1,0 +1,83 @@
+"""Adafactor (Shazeer & Stern, 2018) with factored second moments.
+
+Required by the largest assigned config (arctic-480b): full AdamW state does
+not fit 256 × 16 GB; the factored second moment stores O(n+m) per (n,m)
+matrix instead of O(n·m), cutting optimizer memory to ~<1 byte/param for
+the expert tensors.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+class FactoredSlot(NamedTuple):
+    row: Any  # (..., n) or None
+    col: Any  # (..., m) or None
+    full: Any  # unfactored fallback for <2D params
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    slots: Any  # tree of FactoredSlot
+
+
+def adafactor(
+    lr=1e-3,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+) -> Optimizer:
+    def slot_for(p):
+        if p.ndim >= 2:
+            return FactoredSlot(
+                row=jnp.zeros(p.shape[:-1], jnp.float32),
+                col=jnp.zeros(p.shape[:-2] + (p.shape[-1],), jnp.float32),
+                full=None,
+            )
+        return FactoredSlot(row=None, col=None, full=jnp.zeros_like(p, jnp.float32))
+
+    def init(params):
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            slots=jax.tree.map(slot_for, params),
+        )
+
+    def update(grads, state: AdafactorState, params):
+        step = state.step + 1
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+        lr_t = lr(step) if callable(lr) else lr
+
+        def upd(p, g, s: FactoredSlot):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if s.full is not None:
+                v = beta * s.full + (1 - beta) * g2
+                u = g32 / jnp.sqrt(v + eps)
+                new_s = FactoredSlot(None, None, v)
+            else:
+                row = beta * s.row + (1 - beta) * g2.mean(axis=-1)
+                col = beta * s.col + (1 - beta) * g2.mean(axis=-2)
+                rfac = row / row.mean(axis=-1, keepdims=True)
+                v = rfac[..., None] * col[..., None, :]
+                u = g32 / jnp.sqrt(v + eps)
+                new_s = FactoredSlot(row, col, None)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return new_p, new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = treedef.flatten_up_to(state.slots)
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        return (
+            treedef.unflatten([o[0] for o in out]),
+            AdafactorState(step=step, slots=treedef.unflatten([o[1] for o in out])),
+        )
+
+    return Optimizer(init=init, update=update)

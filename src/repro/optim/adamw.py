@@ -1,0 +1,80 @@
+"""AdamW in functional form (no optax in the container).
+
+``adamw(lr)`` returns an object with ``init(params) -> state`` and
+``update(grads, state, params) -> (updates_applied_params, state)``.
+The second moment can optionally be kept in bf16 to halve optimizer memory
+(used by the largest configs; the loss of precision is in the noise for
+v ≥ 1e-8 scale values — a standard large-model trick).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def adamw(
+    lr: float | Callable[[jax.Array], jax.Array] = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip_norm: float | None = 1.0,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        if grad_clip_norm is not None:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads))
+            )
+            scale = jnp.minimum(1.0, grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr_t = lr(step) if callable(lr) else lr
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g32)
+            update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            if weight_decay:
+                update = update + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * update).astype(p.dtype)
+            return new_p, m32.astype(moment_dtype), v32.astype(moment_dtype)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_v = jax.tree.leaves(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+    return Optimizer(init=init, update=update)

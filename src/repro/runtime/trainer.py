@@ -1,0 +1,128 @@
+"""Fault-tolerant training loop.
+
+Production behaviors implemented (and exercised by tests):
+  * auto-resume: on start, restore the latest COMMITTED checkpoint; the
+    data pipeline skips ahead deterministically (batch = f(seed, step)).
+  * periodic async checkpointing (training is not blocked by disk writes).
+  * step-level retry: a transient step failure re-runs the step from the
+    last good state instead of killing the job.
+  * straggler monitor: rolling-p50 timing watchdog with response hook.
+  * elastic rescale: `Trainer.restore_for_mesh` re-lays-out a checkpoint
+    onto a different mesh (more/fewer pods) and continues.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.tokens import TokenPipeline
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+from repro.runtime.straggler import StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 8
+    ckpt_dir: str = "checkpoints"
+    ckpt_every: int = 20
+    keep: int = 3
+    seed: int = 0
+    max_retries: int = 2
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+        self.cfg = model_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.model = build_model(model_cfg)
+        self.opt = steps_lib.make_optimizer(model_cfg)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.pipeline = TokenPipeline(
+            vocab_size=model_cfg.vocab_size,
+            seq_len=tcfg.seq_len,
+            global_batch=tcfg.global_batch,
+            seed=tcfg.seed,
+        )
+        self.monitor = StragglerMonitor(
+            on_straggler=lambda s, dt, p50: print(
+                f"[straggler] step {s}: {dt:.3f}s vs p50 {p50:.3f}s — "
+                f"flagging host for reassignment", flush=True
+            )
+        )
+        self._step_fn = None
+
+    # ------------------------------------------------------------ state
+    def init_state(self):
+        params = self.model.init(jax.random.PRNGKey(self.tcfg.seed))
+        opt_state = self.opt.init(params)
+        return params, opt_state
+
+    def _compiled_step(self):
+        if self._step_fn is None:
+            fn = steps_lib.make_train_step(self.cfg)
+            self._step_fn = jax.jit(fn, donate_argnums=(0, 1))
+        return self._step_fn
+
+    # ------------------------------------------------------------ resume
+    def restore_or_init(self):
+        params, opt_state = self.init_state()
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return params, opt_state, 0
+        tree = (params, opt_state)
+        restored = self.ckpt.restore(latest, tree)
+        print(f"[trainer] resumed from step {latest}", flush=True)
+        return restored[0], restored[1], latest
+
+    def restore_for_mesh(self, mesh, shardings):
+        """Elastic rescale: restore the latest checkpoint resharded for a
+        *different* mesh (shardings built against that mesh)."""
+        latest = self.ckpt.latest_step()
+        assert latest is not None, "no checkpoint to rescale from"
+        params, opt_state = self.init_state()
+        return self.ckpt.restore(latest, (params, opt_state), shardings), latest
+
+    # ------------------------------------------------------------- loop
+    def run(self, context_fn: Optional[Callable[[int], Any]] = None):
+        params, opt_state, start = self.restore_or_init()
+        step_fn = self._compiled_step()
+        losses = []
+        step = start
+        while step < self.tcfg.steps:
+            batch = self.pipeline.batch(step)  # deterministic skip-ahead
+            if context_fn is not None:
+                batch["context"] = context_fn(step)
+            self.monitor.step_start()
+            for attempt in range(self.tcfg.max_retries + 1):
+                try:
+                    new_params, new_opt, loss = step_fn(params, opt_state, batch)
+                    break
+                except Exception as e:  # transient failure -> retry
+                    if attempt == self.tcfg.max_retries:
+                        # final failure: checkpoint what we have and re-raise
+                        self.ckpt.save(step, (params, opt_state), blocking=True)
+                        raise
+                    print(f"[trainer] step {step} attempt {attempt} failed: {e}; retrying",
+                          flush=True)
+            params, opt_state = new_params, new_opt
+            dt = self.monitor.step_end(step)
+            losses.append(float(loss))
+            step += 1
+            if self.tcfg.log_every and step % self.tcfg.log_every == 0:
+                print(f"[trainer] step {step} loss {float(loss):.4f} ({dt*1e3:.0f} ms)",
+                      flush=True)
+            if step % self.tcfg.ckpt_every == 0 or step == self.tcfg.steps:
+                self.ckpt.save(step, (params, opt_state), blocking=False)
+        self.ckpt.wait()
+        return params, opt_state, losses

@@ -1,0 +1,107 @@
+"""Flash attention (fwd+bwd), RoPE, decode-path properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.layers.flash import flash_attention
+from repro.layers.rope import apply_rope, rope_angles
+
+CFG = ModelConfig(
+    name="t", family="dense", num_layers=1, d_model=32, num_heads=4,
+    num_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32",
+    attn_chunk_q=16, attn_chunk_kv=16,
+)
+
+
+def _ref(q, k, v, causal=True, window=None):
+    b, s, h, hd = q.shape
+    g = h // k.shape[2]
+    kx = jnp.repeat(k, g, 2)
+    vx = jnp.repeat(v, g, 2)
+    lg = jnp.einsum("bqhd,bshd->bhqs", q, kx) * hd ** -0.5
+    pos = jnp.arange(s)
+    m = jnp.ones((s, s), bool)
+    if causal:
+        m &= pos[None, :] <= pos[:, None]
+    if window:
+        m &= pos[None, :] > pos[:, None] - window
+    lg = jnp.where(m[None, None], lg, -2.3e38)
+    return jnp.einsum("bhqs,bshd->bqhd", jax.nn.softmax(lg, -1), vx)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 12), (False, None)])
+@pytest.mark.parametrize("s", [16, 40, 64])
+def test_flash_matches_reference(causal, window, s, rng):
+    b, h, hkv, hd = 2, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    o1 = flash_attention(CFG, q, k, v, causal=causal, window=window)
+    o2 = _ref(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_flash_gradients_match(rng):
+    b, s, h, hkv, hd = 2, 40, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(hd,)), jnp.float32)
+    for causal, window in [(True, None), (True, 12)]:
+        f = lambda *a: (flash_attention(CFG, *a, causal=causal, window=window) * w).sum()
+        r = lambda *a: (_ref(*a, causal, window) * w).sum()
+        g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(r, argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=5e-5)
+
+
+def test_cross_attention_unaligned_context(rng):
+    """kv_len masking: context length not a multiple of the kv chunk."""
+    b, sq, skv, h, hkv, hd = 1, 16, 19, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, skv, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, skv, hkv, hd)), jnp.float32)
+    o1 = flash_attention(CFG, q, k, v, causal=False)
+    g = h // hkv
+    kx, vx = jnp.repeat(k, g, 2), jnp.repeat(v, g, 2)
+    lg = jnp.einsum("bqhd,bshd->bhqs", q, kx) * hd ** -0.5
+    o2 = jnp.einsum("bhqs,bshd->bqhd", jax.nn.softmax(lg, -1), vx)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relativity(rng):
+    s, h, hd = 12, 2, 16
+    x = jnp.asarray(rng.normal(size=(1, s, h, hd)), jnp.float32)
+    pos = jnp.arange(s)
+    cos, sin = rope_angles(pos, hd, 10_000.0)
+    y = apply_rope(x, cos, sin, 1.0)
+    np.testing.assert_allclose(  # rotation preserves norms
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jnp.asarray(rng.normal(size=(hd,)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(hd,)), jnp.float32)
+
+    def dot_at(p0, p1):
+        cos0, sin0 = rope_angles(jnp.asarray([p0]), hd, 10_000.0)
+        cos1, sin1 = rope_angles(jnp.asarray([p1]), hd, 10_000.0)
+        qr = apply_rope(q[None, None, None, :], cos0[None], sin0[None], 1.0)
+        vr = apply_rope(v[None, None, None, :], cos1[None], sin1[None], 1.0)
+        return float((qr * vr).sum())
+
+    assert abs(dot_at(0, 3) - dot_at(5, 8)) < 1e-3
+
+
+def test_partial_rope_leaves_tail_untouched(rng):
+    s, h, hd = 8, 2, 16
+    x = jnp.asarray(rng.normal(size=(1, s, h, hd)), jnp.float32)
+    pos = jnp.arange(s)
+    cos, sin = rope_angles(pos, hd // 2, 10_000.0)
+    y = apply_rope(x, cos, sin, 0.5)
+    np.testing.assert_array_equal(np.asarray(x[..., 8:]), np.asarray(y[..., 8:]))
+    assert not np.allclose(np.asarray(x[..., 1:8]), np.asarray(y[..., 1:8]))

@@ -1,0 +1,55 @@
+"""Checkpoint layer: roundtrip, atomicity, GC, resume semantics."""
+import json
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(key):
+    return {
+        "a": jax.random.normal(key, (8, 16)),
+        "b": {"c": jnp.arange(10, dtype=jnp.int32), "d": jnp.float32(3.5)},
+    }
+
+
+def test_roundtrip(tmp_path, key):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = _tree(key)
+    mgr.save(7, tree, blocking=True)
+    assert mgr.latest_step() == 7
+    out = mgr.restore(7, jax.tree.map(lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_gc(tmp_path, key):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(jax.random.fold_in(key, s)), blocking=False)
+    mgr.wait()
+    mgr._gc()
+    assert mgr.steps() == [3, 4]  # keep=2
+
+
+def test_torn_checkpoint_ignored(tmp_path, key):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(5, _tree(key), blocking=True)
+    torn = tmp_path / "step_9"
+    torn.mkdir()
+    (torn / "manifest.json").write_text(json.dumps({"step": 9}))
+    # no COMMITTED sentinel -> invisible
+    assert mgr.latest_step() == 5
+
+
+def test_restore_rejects_shape_change(tmp_path, key):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": jnp.zeros((4, 4))}, blocking=True)
+    try:
+        mgr.restore(1, {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)})
+        raise AssertionError("expected shape mismatch error")
+    except ValueError as e:
+        assert "shape" in str(e)

@@ -1,0 +1,71 @@
+"""Property tests for the runtime pruning core (Algorithm 1 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pruning
+
+
+@st.composite
+def score_rows(draw):
+    t = draw(st.integers(1, 6))
+    d = draw(st.integers(1, 40))
+    k = draw(st.integers(1, 48))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    scores = rng.normal(size=(t, d)).astype(np.float32)
+    mask = rng.random((t, d)) < draw(st.floats(0.1, 1.0))
+    return scores, mask, k
+
+
+@given(score_rows())
+@settings(max_examples=60, deadline=None)
+def test_streaming_matches_oracle(case):
+    scores, mask, k = case
+    s, m = jnp.asarray(scores), jnp.asarray(mask)
+    oracle = pruning.topk_keep_mask(s, m, k)
+    stream = pruning.streaming_keep_mask(s, m, k, tile=8)
+    assert np.array_equal(np.asarray(oracle), np.asarray(stream))
+
+
+@given(score_rows())
+@settings(max_examples=60, deadline=None)
+def test_keep_mask_invariants(case):
+    scores, mask, k = case
+    s, m = jnp.asarray(scores), jnp.asarray(mask)
+    keep = np.asarray(pruning.topk_keep_mask(s, m, k))
+    mask_np = np.asarray(m)
+    # never keeps an invalid slot
+    assert not np.any(keep & ~mask_np)
+    # keeps exactly min(k, valid) per row
+    want = np.minimum(k, mask_np.sum(1))
+    assert np.array_equal(keep.sum(1), want)
+    # kept scores dominate dropped scores per row
+    for t in range(keep.shape[0]):
+        kept = scores[t][keep[t]]
+        dropped = scores[t][mask_np[t] & ~keep[t]]
+        if kept.size and dropped.size:
+            assert kept.min() >= dropped.max()
+
+
+def test_k_geq_degree_keeps_all():
+    rng = np.random.default_rng(1)
+    s = jnp.asarray(rng.normal(size=(5, 12)).astype(np.float32))
+    m = jnp.asarray(rng.random((5, 12)) < 0.7)
+    assert np.array_equal(
+        np.asarray(pruning.topk_keep_mask(s, m, 12)), np.asarray(m)
+    )
+    assert np.array_equal(
+        np.asarray(pruning.streaming_keep_mask(s, m, 50)), np.asarray(m)
+    )
+
+
+def test_tie_breaking_first_arrival():
+    # equal scores: earlier slot wins (paper line 22: discard on equal)
+    s = jnp.asarray([[1.0, 1.0, 1.0, 1.0]])
+    m = jnp.ones((1, 4), bool)
+    keep = np.asarray(pruning.topk_keep_mask(s, m, 2))[0]
+    assert list(np.where(keep)[0]) == [0, 1]
+    keep2 = np.asarray(pruning.streaming_keep_mask(s, m, 2, tile=2))[0]
+    assert list(np.where(keep2)[0]) == [0, 1]

@@ -1,0 +1,22 @@
+"""Sharding rule units (pattern matching is mesh-independent)."""
+from repro.distributed.sharding import param_logical_axes
+
+
+def test_param_patterns():
+    cases = [
+        ("embed/table", 2, False, ("vocab", None)),
+        ("groups/0/0/attn/wq", 3, False, (None, None, "heads")),
+        ("groups/0/0/attn/wq", 3, True, (None, "fsdp", "heads")),
+        ("groups/0/1/mlp/wi", 3, False, (None, None, "ffn")),
+        ("groups/0/1/mlp/wo", 3, True, (None, "ffn", "fsdp")),
+        ("groups/0/0/moe/experts/wi", 4, True, (None, "experts", "fsdp", "ffn")),
+        ("groups/0/0/moe/router/w", 3, False, (None, None, "experts")),
+        ("lm_head/w", 2, True, ("fsdp", "vocab")),
+        ("groups/0/0/rwkv/wk2", 3, False, (None, None, "ffn")),
+        ("groups/0/0/lru/wx", 3, False, (None, None, "lru")),
+        ("final_norm/scale", 1, False, (None,)),
+        ("mu/groups/0/0/attn/wq", 3, False, (None, None, "heads")),  # opt state
+    ]
+    for path, ndim, fsdp, want in cases:
+        got = param_logical_axes(path, ndim, fsdp)
+        assert got == want, (path, got, want)

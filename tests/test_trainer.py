@@ -1,0 +1,88 @@
+"""Training runtime: loss goes down, auto-resume continues, straggler
+monitor fires, optimizer units."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.optim import adafactor, adamw
+from repro.optim.schedules import cosine_schedule, linear_warmup
+from repro.runtime import TrainConfig, Trainer
+from repro.runtime.straggler import StragglerMonitor
+
+
+def test_short_training_loss_decreases(tmp_path):
+    cfg = get_config("qwen2_1_5b", smoke=True)
+    cfg = dataclasses.replace(cfg, grad_accum=1)
+    tcfg = TrainConfig(
+        steps=30, seq_len=32, global_batch=8,
+        ckpt_dir=str(tmp_path), ckpt_every=10, log_every=0,
+    )
+    tr = Trainer(cfg, tcfg)
+    _, _, losses = tr.run()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+
+
+def test_auto_resume_continues(tmp_path):
+    cfg = get_config("qwen2_1_5b", smoke=True)
+    cfg = dataclasses.replace(cfg, grad_accum=1)
+    tcfg = TrainConfig(steps=10, seq_len=32, global_batch=8,
+                       ckpt_dir=str(tmp_path), ckpt_every=5, log_every=0)
+    Trainer(cfg, tcfg).run()
+    tcfg2 = dataclasses.replace(tcfg, steps=14)
+    tr2 = Trainer(cfg, tcfg2)
+    params, opt_state, losses = tr2.run()
+    # resumed at 10, ran 4 more steps
+    assert len(losses) == 4
+    assert tr2.ckpt.latest_step() == 14
+
+
+def test_straggler_monitor_fires():
+    import time
+
+    fired = []
+    mon = StragglerMonitor(window=16, threshold=1.5,
+                           on_straggler=lambda *a: fired.append(a))
+    for i in range(12):
+        mon.step_start()
+        time.sleep(0.002)
+        mon.step_end(i)
+    mon.step_start()
+    time.sleep(0.05)  # straggler
+    mon.step_end(99)
+    assert any(e[0] == 99 for e in fired)
+
+
+def _quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["v"] - 1.0) ** 2)
+
+
+def test_adamw_converges_quadratic():
+    opt = adamw(lr=0.1)
+    params = {"w": jnp.zeros((4, 4)), "v": jnp.zeros((7,))}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(_quad_loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(_quad_loss(params)) < 1e-2
+
+
+def test_adafactor_converges_quadratic():
+    opt = adafactor(lr=0.3)
+    params = {"w": jnp.zeros((4, 4)), "v": jnp.zeros((7,))}
+    state = opt.init(params)
+    for _ in range(300):
+        g = jax.grad(_quad_loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(_quad_loss(params)) < 5e-2
+
+
+def test_schedules_shapes():
+    f = cosine_schedule(1e-3, 10, 100)
+    assert float(f(jnp.asarray(0))) == 0.0
+    assert abs(float(f(jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(f(jnp.asarray(100))) < 2e-4
+    g = linear_warmup(1e-2, 5)
+    assert abs(float(g(jnp.asarray(5))) - 1e-2) < 1e-9

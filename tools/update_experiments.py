@@ -1,0 +1,95 @@
+"""Regenerate the §Roofline table + §Dry-run summary inside EXPERIMENTS.md
+from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(mesh):
+    recs = {}
+    for f in sorted(glob.glob(str(ROOT / f"experiments/dryrun/*_{mesh}.json"))):
+        r = json.loads(Path(f).read_text())
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def roofline_table():
+    recs = load("single")
+    multi = load("multi")
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant | "
+        "mem/chip | useful | roofline | multi-pod |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(recs.items()):
+        m = multi.get((arch, shape), {})
+        mstat = m.get("status", "—")
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {arch} | {shape} | — | — | — | skipped | — | — | — | {mstat} |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {arch} | {shape} | ERROR | | | | | | | {mstat} |"
+            )
+            continue
+        mem = r.get("memory", {})
+        tot = ((mem.get("argument_bytes") or 0) + (mem.get("temp_bytes") or 0)) / 1e9
+        lines.append(
+            "| {a} | {s} | {tc} | {tm} | {tl} | **{dom}** | {mem:.1f} GB | "
+            "{u:.2f} | {rf:.3f} | {ms} |".format(
+                a=arch, s=shape,
+                tc=fmt_s(r["t_compute"]), tm=fmt_s(r["t_memory"]),
+                tl=fmt_s(r["t_collective"]), dom=r["dominant"], mem=tot,
+                u=r.get("useful_flops_ratio") or 0,
+                rf=r.get("roofline_fraction") or 0, ms=mstat,
+            )
+        )
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    sk = sum(1 for r in recs.values() if r["status"] == "skipped")
+    er = sum(1 for r in recs.values() if r["status"] == "error")
+    mok = sum(1 for r in multi.values() if r["status"] == "ok")
+    msk = sum(1 for r in multi.values() if r["status"] == "skipped")
+    mer = sum(1 for r in multi.values() if r["status"] == "error")
+    summary = (
+        f"\nSingle-pod (16×16, probes+roofline): **{ok} ok / {sk} skipped / "
+        f"{er} errors**. Multi-pod (2×16×16, compile-proof): **{mok} ok / "
+        f"{msk} skipped / {mer} errors**.\n"
+    )
+    return summary + "\n" + "\n".join(lines) + "\n"
+
+
+def main():
+    path = ROOT / "EXPERIMENTS.md"
+    text = path.read_text()
+    table = roofline_table()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in text:
+        # replace marker and anything until the next section header
+        pattern = re.escape(marker) + r".*?(?=\n## )"
+        text = re.sub(pattern, marker + "\n\n" + table, text, flags=re.S)
+    path.write_text(text)
+    print("EXPERIMENTS.md roofline table updated")
+
+
+if __name__ == "__main__":
+    main()
