@@ -59,7 +59,10 @@ def disparity_ratio(task, params, top_frac: float = 0.2, max_targets: int = 512)
 
 def main():
     for model, ds in [("han", "acm"), ("han", "imdb"), ("han", "dblp")]:
-        task = pipeline.prepare(model, ds, scale=0.05, max_degree=128)
+        # flat layout: disparity_ratio reads the full (T, D_max) view, so
+        # building buckets first would pay for both layouts
+        task = pipeline.prepare(model, ds, scale=0.05, max_degree=128,
+                                bucket_sizes=None)
         params = pipeline.train_hgnn(task, steps=60, lr=5e-3)
         r = disparity_ratio(task, params)
         emit(f"fig2_disparity_{model}_{ds}", 0.0, f"top20pct_share={r:.4f}")

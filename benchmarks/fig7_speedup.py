@@ -21,7 +21,12 @@ def main():
     k = 8
     speedups = []
     for model, ds in PAIRS:
-        task = pipeline.prepare(model, ds, scale=0.04, max_degree=96)
+        # flat layout on both flows: this figure models the paper's
+        # traditional-platform staged baseline, which pads every target to
+        # D_max; the bucketed layout's savings are reported separately by
+        # benchmarks/sgb_build.py
+        task = pipeline.prepare(model, ds, scale=0.04, max_degree=96,
+                                bucket_sizes=None)
         t_base = time_fn(
             jax.jit(lambda p: task.logits(p, FlowConfig("staged"))), task.params,
             warmup=1, iters=3,

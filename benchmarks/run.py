@@ -18,10 +18,12 @@ def main() -> None:
         fig9_accuracy,
         kernels_micro,
         roofline,
+        sgb_build,
     )
 
     print("name,us_per_call,derived", flush=True)
     for mod in (
+        sgb_build,
         fig2_disparity,
         fig3_overhead,
         fig7_speedup,

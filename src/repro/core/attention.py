@@ -56,6 +56,18 @@ def decompose_scores(
     return DecomposedScores(theta_src, theta_dst, theta_rel)
 
 
+def slice_targets(scores: DecomposedScores, targets: jax.Array) -> DecomposedScores:
+    """Restrict the target-side coefficients to a subset of target rows.
+
+    Used by the degree-bucketed NA path: θ_u* is a global per-source table
+    and stays whole; θ_*v is per-target and is gathered down to the bucket's
+    targets so per-bucket aggregation sees a dense (T_b, H) table.
+    """
+    return DecomposedScores(
+        scores.theta_src, scores.theta_dst[targets], scores.theta_rel
+    )
+
+
 def _edge_scores(
     scores: DecomposedScores,
     nbr_idx: jax.Array,  # (T, D) global ids

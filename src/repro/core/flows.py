@@ -5,15 +5,25 @@
   * ``staged_pruned`` — separate pruning pass then staged NA (Fig. 3 setup)
   * ``fused``         — ADE operation-fusion flow (scan-tiled jnp)
   * ``fused_kernel``  — ADE flow via the Pallas kernel (interpret-mode on CPU)
+
+Two entry points: ``run_aggregate`` operates on raw padded-CSC arrays;
+``run_aggregate_graph`` accepts either a flat ``SemanticGraph`` or a
+degree-bucketed ``BucketedSemanticGraph`` and, for the latter, runs NA once
+per bucket and scatters per-bucket outputs back into target order. Buckets
+whose capacity is ≤ ``prune_k`` hit the paper's §4.3 pruner bypass inside
+``run_aggregate`` (their retention domain is a no-op), so low-degree targets
+never pay for the pruning machinery.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import attention
+from repro.core.hetgraph import BucketedSemanticGraph, SemanticGraph
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,14 +54,49 @@ def run_aggregate(
         )
     # paper §4.3: targets with |N(v)| <= K bypass the pruner entirely (the
     # retention domain is a no-op there). Static per-graph routing: when the
-    # whole semantic graph fits under K, the fused flow IS the plain
-    # aggregation — run it without the retention-domain machinery.
+    # whole padded table fits under K, the fused flow IS the plain
+    # aggregation — run it without the retention-domain machinery. Under the
+    # bucketed layout this fires per bucket, not per graph.
     if cfg.prune_k is not None and cfg.prune_k >= nbr_idx.shape[1]:
         return attention.aggregate_staged(
             h_proj, scores, nbr_idx, nbr_mask, edge_type, prune_k=None
         )
+    # clamp the streaming tile to the padded width: a capacity-32 bucket
+    # must not be padded out to a 128-wide tile (the streaming top-k merge
+    # is tile-size invariant, so this is a pure FLOPs/memory saving)
     return attention.aggregate_fused(
         h_proj, scores, nbr_idx, nbr_mask, edge_type,
-        prune_k=cfg.prune_k, tile=cfg.tile,
+        prune_k=cfg.prune_k, tile=min(cfg.tile, nbr_idx.shape[1]),
         use_kernel=(cfg.flow == "fused_kernel"),
+    )
+
+
+def run_aggregate_graph(
+    cfg: FlowConfig,
+    h_proj: jax.Array,
+    scores: attention.DecomposedScores,
+    sg: Union[SemanticGraph, BucketedSemanticGraph],
+) -> jax.Array:
+    """NA over a semantic graph. Returns (num_targets, H, dh).
+
+    ``scores.theta_dst`` must cover the graph's full target range (one row
+    per ``dst_type`` vertex, in local order).
+    """
+    use_ety = scores.theta_rel is not None
+    if isinstance(sg, BucketedSemanticGraph):
+        _, h, dh = h_proj.shape
+        out = jnp.zeros((sg.num_targets, h, dh), h_proj.dtype)
+        for b in sg.buckets:
+            targets = jnp.asarray(b.targets)
+            z = run_aggregate(
+                cfg, h_proj, attention.slice_targets(scores, targets),
+                jnp.asarray(b.nbr_idx), jnp.asarray(b.nbr_mask),
+                jnp.asarray(b.edge_type) if use_ety else None,
+            )
+            out = out.at[targets].set(z)
+        return out
+    return run_aggregate(
+        cfg, h_proj, scores,
+        jnp.asarray(sg.nbr_idx), jnp.asarray(sg.nbr_mask),
+        jnp.asarray(sg.edge_type) if use_ety else None,
     )

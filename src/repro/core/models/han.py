@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention, semantic_fusion
-from repro.core.flows import FlowConfig, run_aggregate
-from repro.core.hetgraph import HetGraph, SemanticGraph
+from repro.core.flows import FlowConfig, run_aggregate_graph
+from repro.core.hetgraph import AnySemanticGraph, HetGraph
 from repro.core.projection import glorot, init_projection, project_features
 
 
@@ -46,7 +46,7 @@ class HAN:
         self,
         params,
         features: Dict[str, jax.Array],
-        sgs: List[SemanticGraph],
+        sgs: List[AnySemanticGraph],
         node_types,
         dst_offset: int,
         num_targets: int,
@@ -63,9 +63,7 @@ class HAN:
             sc = attention.decompose_scores(
                 h, ap["a_src"], ap["a_dst"], dst_slice=dst_sl
             )
-            z = run_aggregate(
-                flow, h, sc, jnp.asarray(sg.nbr_idx), jnp.asarray(sg.nbr_mask)
-            )
+            z = run_aggregate_graph(flow, h, sc, sg)
             zs.append(jax.nn.elu(z.reshape(num_targets, self.dim)))
         z = semantic_fusion.semantic_attention(params["sem"], jnp.stack(zs))
         return z @ params["out"]["w"] + params["out"]["b"]

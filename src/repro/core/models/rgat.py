@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention
-from repro.core.flows import FlowConfig, run_aggregate
-from repro.core.hetgraph import HetGraph, SemanticGraph
+from repro.core.flows import FlowConfig, run_aggregate_graph
+from repro.core.hetgraph import AnySemanticGraph, HetGraph
 from repro.core.projection import glorot, init_projection, project_features
 
 
@@ -52,7 +52,7 @@ class RGAT:
         self,
         params,
         features: Dict[str, jax.Array],
-        sgs: List[SemanticGraph],
+        sgs: List[AnySemanticGraph],
         g_meta,  # dict: node_types, offsets, num_nodes, label_type
         flow: FlowConfig = FlowConfig(),
     ) -> jax.Array:
@@ -75,9 +75,7 @@ class RGAT:
                 sc = attention.decompose_scores(
                     h, ap["a_src"], ap["a_dst"], dst_slice=dst_sl
                 )
-                z = run_aggregate(
-                    flow, h, sc, jnp.asarray(sg.nbr_idx), jnp.asarray(sg.nbr_mask)
-                )
+                z = run_aggregate_graph(flow, h, sc, sg)
                 agg[t].append(z)
             h_by_type = {
                 t: jax.nn.elu(

@@ -14,8 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention
-from repro.core.flows import FlowConfig, run_aggregate
-from repro.core.hetgraph import HetGraph, SemanticGraph
+from repro.core.flows import FlowConfig, run_aggregate_graph
+from repro.core.hetgraph import AnySemanticGraph, HetGraph
 from repro.core.projection import glorot, init_projection, project_features
 
 
@@ -62,7 +62,7 @@ class SimpleHGN:
         self,
         params,
         features: Dict[str, jax.Array],
-        union_sgs: Dict[str, SemanticGraph],
+        union_sgs: Dict[str, AnySemanticGraph],
         g_meta,
         flow: FlowConfig = FlowConfig(),
     ) -> jax.Array:
@@ -83,11 +83,7 @@ class SimpleHGN:
                     h, lp["a_src"], lp["a_dst"], dst_slice=dst_sl,
                     rel_emb=rel_emb, a_rel=lp["a_rel"],
                 )
-                z = run_aggregate(
-                    flow, h, sc,
-                    jnp.asarray(sg.nbr_idx), jnp.asarray(sg.nbr_mask),
-                    edge_type=jnp.asarray(sg.edge_type),
-                )
+                z = run_aggregate_graph(flow, h, sc, sg)
                 res = h_by_type[t] @ lp["res"][t]
                 new_h[t] = jax.nn.elu(z.reshape(num_nodes[t], self.dim) + res)
             h_by_type = new_h

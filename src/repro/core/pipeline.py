@@ -8,7 +8,7 @@ split for accuracy experiments.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +54,11 @@ def prepare(
     scale: float = 0.1,
     max_degree: Optional[int] = 256,
     seed: int = 0,
+    bucket_sizes: Optional[Sequence[int]] = hetgraph.DEFAULT_BUCKET_SIZES,
 ) -> HGNNTask:
+    """Assemble dataset → SGB → model. ``bucket_sizes`` selects the SGB
+    layout: a capacity list yields the degree-bucketed build (the default),
+    ``None`` the flat (T, D_max) padded-CSC build."""
     g = synthetic.DATASETS[dataset](scale=scale, seed=seed)
     feats = {t: jnp.asarray(f) for t, f in g.features.items()}
     offsets = g.type_offsets()
@@ -68,7 +72,9 @@ def prepare(
 
     if model_name == "han":
         mps = synthetic.METAPATHS[dataset]
-        sgs = hetgraph.build_metapath_graphs(g, mps, max_degree=max_degree, seed=seed)
+        sgs = hetgraph.build_metapath_graphs(
+            g, mps, max_degree=max_degree, seed=seed, bucket_sizes=bucket_sizes
+        )
         model = HAN()
         params = model.init(key, g, list(mps))
         n_t = g.num_nodes[g.label_type]
@@ -78,7 +84,9 @@ def prepare(
             return model.apply(p, feats, sgs, g.node_types, off, n_t, flow)
 
     elif model_name == "rgat":
-        sgs = hetgraph.build_relation_graphs(g, max_degree=max_degree, seed=seed)
+        sgs = hetgraph.build_relation_graphs(
+            g, max_degree=max_degree, seed=seed, bucket_sizes=bucket_sizes
+        )
         model = RGAT()
         params = model.init(key, g, [sg.name for sg in sgs])
 
@@ -86,7 +94,9 @@ def prepare(
             return model.apply(p, feats, sgs, g_meta, flow)
 
     elif model_name == "simple_hgn":
-        union = hetgraph.build_union_graph(g, max_degree=max_degree, seed=seed)
+        union = hetgraph.build_union_graph(
+            g, max_degree=max_degree, seed=seed, bucket_sizes=bucket_sizes
+        )
         sgs = list(union.values())
         model = SimpleHGN()
         params = model.init(key, g, num_edge_types=sgs[0].num_edge_types)

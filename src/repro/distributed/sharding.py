@@ -20,6 +20,11 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+try:  # private fallback for jax 0.4.x; absent/moved on other releases
+    from jax._src import mesh as _mesh_internal
+except ImportError:  # pragma: no cover - depends on installed jax
+    _mesh_internal = None
+
 # logical axis -> preferred mesh axes (in order; tuple = shard over several)
 DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
     "batch": ("pod", "data"),
@@ -54,11 +59,48 @@ def axis_rules(overrides: Dict[str, Tuple[str, ...]]):
         _RULES = old
 
 
-def _mesh_axes() -> Dict[str, int]:
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or not am.axis_names:
+def _axes_of(m) -> Dict[str, int]:
+    if m is None:
         return {}
-    return dict(zip(am.axis_names, am.axis_sizes))
+    names = getattr(m, "axis_names", ()) or ()
+    if not names:
+        return {}
+    sizes = getattr(m, "axis_sizes", None)
+    if sizes is not None:
+        return dict(zip(names, sizes))
+    shape = getattr(m, "shape", None)  # Mesh.shape: OrderedDict name -> size
+    return dict(shape) if shape is not None else {}
+
+
+def _mesh_axes() -> Dict[str, int]:
+    # jax >= 0.5 exposes the ambient abstract mesh publicly; 0.4.x keeps it
+    # in jax._src.mesh and sets the physical mesh via the Mesh context
+    # manager (thread_resources). Support both.
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        fn = getattr(_mesh_internal, "get_abstract_mesh", None)
+    if fn is not None:
+        try:
+            axes = _axes_of(fn())
+        except Exception:
+            axes = {}
+        if axes:
+            return axes
+    env = getattr(_mesh_internal, "thread_resources", None)
+    if env is not None:
+        return _axes_of(env.env.physical_mesh)
+    return {}
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient for ``constrain``.
+
+    ``jax.set_mesh`` where available (jax >= 0.5); otherwise the classic
+    ``with mesh:`` context (thread_resources), which 0.4.x pjit resolves.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def resolve_spec(

@@ -1,8 +1,18 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
 CPU device; mesh-dependent tests spawn subprocesses with their own flags."""
+import sys
+from pathlib import Path
+
 import jax
 import numpy as np
 import pytest
+
+# tests import the benchmarks package (shared golden oracles, disparity
+# helper); make the repo root importable even under bare `pytest`, whose
+# prepend import mode only adds tests/ to sys.path
+_ROOT = str(Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
 @pytest.fixture(scope="session")

@@ -6,9 +6,12 @@ import dataclasses
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.runtime import TrainConfig, Trainer
+
+pytestmark = pytest.mark.slow
 
 
 def test_rescale_restore_roundtrip(tmp_path):

@@ -27,6 +27,72 @@ def test_topk_select_sweep(t, d, k, rng):
 
 
 @pytest.mark.parametrize(
+    "t,d,k",
+    [
+        # shapes deliberately NOT multiples of the (8, 128) kernel tile
+        (7, 100, 4), (9, 129, 8), (8, 127, 8), (15, 255, 16), (1, 3, 2),
+        # exact tile boundary for contrast
+        (8, 128, 8), (16, 256, 4),
+    ],
+)
+def test_topk_select_pallas_edge_shapes(t, d, k, rng):
+    """Pallas pruner on tile-unaligned shapes: the kernel pads to (8, 128)
+    tiles internally; padded slots must never leak into the result."""
+    s = rng.normal(size=(t, d)).astype(np.float32)
+    m = rng.random((t, d)) < 0.7
+    v1, i1 = topk_select(jnp.asarray(s), jnp.asarray(m), k)
+    v2, i2 = topk_select_ref(jnp.asarray(s), jnp.asarray(m), k)
+    i1, i2 = np.asarray(i1), np.asarray(i2)
+    v1 = np.asarray(v1)
+    for row in range(t):
+        a = i1[row][i1[row] >= 0]
+        b = i2[row][i2[row] >= 0]
+        assert set(a.tolist()) == set(b.tolist()), row
+        # ids must address real slots, never the kernel's padding columns
+        assert (a < d).all() and (a >= 0).all()
+        # values at kept slots equal the input scores there
+        np.testing.assert_array_equal(np.sort(v1[row][: len(a)])[::-1],
+                                      np.sort(s[row][a])[::-1])
+
+
+@pytest.mark.parametrize("t,d", [(3, 40), (8, 128), (9, 130)])
+def test_topk_select_pallas_k1(t, d, rng):
+    """k=1 degenerate retention domain: the single kept slot is the row
+    argmax of the masked scores (earliest slot on ties)."""
+    s = rng.normal(size=(t, d)).astype(np.float32)
+    m = rng.random((t, d)) < 0.8
+    _, ids = topk_select(jnp.asarray(s), jnp.asarray(m), 1)
+    ids = np.asarray(ids)[:, 0]
+    for row in range(t):
+        if m[row].any():
+            masked = np.where(m[row], s[row], -np.inf)
+            assert ids[row] == int(np.argmax(masked)), row
+        else:
+            assert ids[row] == -1, row
+
+
+def test_topk_select_pallas_all_masked_rows(rng):
+    """Rows with zero valid neighbors must come back empty (-1 ids), even
+    when interleaved with dense rows and on tile-unaligned shapes."""
+    t, d, k = 10, 137, 6
+    s = rng.normal(size=(t, d)).astype(np.float32)
+    m = rng.random((t, d)) < 0.6
+    m[1] = False
+    m[4] = False
+    m[9] = False
+    v, ids = topk_select(jnp.asarray(s), jnp.asarray(m), k)
+    ids = np.asarray(ids)
+    from repro.kernels.common import NEG
+
+    for row in (1, 4, 9):
+        assert (ids[row] == -1).all(), row
+        assert (np.asarray(v)[row] <= NEG / 2).all(), row
+    for row in (0, 2, 3, 5, 6, 7, 8):
+        want = min(k, int(m[row].sum()))
+        assert (ids[row] >= 0).sum() == want, row
+
+
+@pytest.mark.parametrize(
     "t,d,h,dh,n,k",
     [(11, 70, 8, 8, 200, 5), (8, 128, 8, 8, 64, 50), (5, 33, 4, 16, 40, 33),
      (2, 7, 2, 4, 10, 3)],

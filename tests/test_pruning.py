@@ -1,38 +1,45 @@
-"""Property tests for the runtime pruning core (Algorithm 1 semantics)."""
-import jax
+"""Tests for the runtime pruning core (Algorithm 1 semantics).
+
+The former hypothesis property tests are expressed as seeded
+``np.random.default_rng`` parameter sweeps: each case draws (T, D, k, mask
+density) from the seed so the sweep covers the same space deterministically
+and with zero extra dependencies.
+"""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core import pruning
 
 
-@st.composite
-def score_rows(draw):
-    t = draw(st.integers(1, 6))
-    d = draw(st.integers(1, 40))
-    k = draw(st.integers(1, 48))
-    seed = draw(st.integers(0, 2**31 - 1))
+def _case(seed: int):
+    """One randomized (scores, mask, k) case, seeded like the old strategy:
+    T ∈ [1,6], D ∈ [1,40], k ∈ [1,48], mask density ∈ [0.1, 1.0]."""
     rng = np.random.default_rng(seed)
+    t = int(rng.integers(1, 7))
+    d = int(rng.integers(1, 41))
+    k = int(rng.integers(1, 49))
+    density = float(rng.uniform(0.1, 1.0))
     scores = rng.normal(size=(t, d)).astype(np.float32)
-    mask = rng.random((t, d)) < draw(st.floats(0.1, 1.0))
+    mask = rng.random((t, d)) < density
     return scores, mask, k
 
 
-@given(score_rows())
-@settings(max_examples=60, deadline=None)
-def test_streaming_matches_oracle(case):
-    scores, mask, k = case
+SWEEP = list(range(60))
+
+
+@pytest.mark.parametrize("seed", SWEEP)
+def test_streaming_matches_oracle(seed):
+    scores, mask, k = _case(seed)
     s, m = jnp.asarray(scores), jnp.asarray(mask)
     oracle = pruning.topk_keep_mask(s, m, k)
     stream = pruning.streaming_keep_mask(s, m, k, tile=8)
     assert np.array_equal(np.asarray(oracle), np.asarray(stream))
 
 
-@given(score_rows())
-@settings(max_examples=60, deadline=None)
-def test_keep_mask_invariants(case):
-    scores, mask, k = case
+@pytest.mark.parametrize("seed", SWEEP)
+def test_keep_mask_invariants(seed):
+    scores, mask, k = _case(seed)
     s, m = jnp.asarray(scores), jnp.asarray(mask)
     keep = np.asarray(pruning.topk_keep_mask(s, m, k))
     mask_np = np.asarray(m)
@@ -49,6 +56,27 @@ def test_keep_mask_invariants(case):
             assert kept.min() >= dropped.max()
 
 
+@pytest.mark.parametrize("seed", SWEEP[:20])
+def test_streaming_topk_values_and_ids(seed):
+    """streaming_topk against the oracle at the (values, ids) level: the
+    retained ids must be the oracle's keep set and the values must be the
+    masked scores at those ids, in descending order."""
+    scores, mask, k = _case(seed)
+    s, m = jnp.asarray(scores), jnp.asarray(mask)
+    vals, ids = pruning.streaming_topk(s, m, k, tile=8)
+    vals, ids = np.asarray(vals), np.asarray(ids)
+    oracle = np.asarray(pruning.topk_keep_mask(s, m, k))
+    for t in range(scores.shape[0]):
+        got = ids[t][ids[t] >= 0]
+        assert set(got.tolist()) == set(np.where(oracle[t])[0].tolist())
+        # values sorted descending and equal to the scores at the kept slots
+        v = vals[t][: len(got)]
+        assert np.all(np.diff(v) <= 0)
+        np.testing.assert_array_equal(v, np.sort(scores[t][oracle[t]])[::-1])
+        # padding slots carry the sentinel
+        assert np.all(vals[t][len(got):] <= pruning.NEG / 2)
+
+
 def test_k_geq_degree_keeps_all():
     rng = np.random.default_rng(1)
     s = jnp.asarray(rng.normal(size=(5, 12)).astype(np.float32))
@@ -61,6 +89,19 @@ def test_k_geq_degree_keeps_all():
     )
 
 
+def test_k_geq_degree_streaming_topk_bypass_consistent():
+    """The k ≥ D bypass (paper §4.3) must agree with running the streaming
+    merge anyway: every valid slot retained, no invalid slot retained."""
+    rng = np.random.default_rng(7)
+    s = jnp.asarray(rng.normal(size=(4, 10)).astype(np.float32))
+    m = jnp.asarray(rng.random((4, 10)) < 0.6)
+    _, ids = pruning.streaming_topk(s, m, 16, tile=4)
+    ids = np.asarray(ids)
+    for t in range(4):
+        got = set(ids[t][ids[t] >= 0].tolist())
+        assert got == set(np.where(np.asarray(m)[t])[0].tolist())
+
+
 def test_tie_breaking_first_arrival():
     # equal scores: earlier slot wins (paper line 22: discard on equal)
     s = jnp.asarray([[1.0, 1.0, 1.0, 1.0]])
@@ -69,3 +110,42 @@ def test_tie_breaking_first_arrival():
     assert list(np.where(keep)[0]) == [0, 1]
     keep2 = np.asarray(pruning.streaming_keep_mask(s, m, 2, tile=2))[0]
     assert list(np.where(keep2)[0]) == [0, 1]
+
+
+@pytest.mark.parametrize("tile", [1, 2, 3, 8])
+def test_tie_breaking_across_tiles(tile):
+    """Duplicate scores that straddle tile boundaries: the incumbent (earlier
+    arrival) must beat an equal newcomer regardless of the tile layout."""
+    s = jnp.asarray([[2.0, 1.0, 2.0, 1.0, 2.0, 1.0, 2.0, 1.0]])
+    m = jnp.ones((1, 8), bool)
+    oracle = np.asarray(pruning.topk_keep_mask(s, m, 3))[0]
+    stream = np.asarray(pruning.streaming_keep_mask(s, m, 3, tile=tile))[0]
+    assert list(np.where(oracle)[0]) == [0, 2, 4]
+    assert np.array_equal(oracle, stream)
+
+
+def test_rows_with_fewer_than_k_valid():
+    """Rows whose valid count < k: all valid slots kept, none invented."""
+    rng = np.random.default_rng(3)
+    s = jnp.asarray(rng.normal(size=(6, 20)).astype(np.float32))
+    mask = np.zeros((6, 20), bool)
+    for t in range(6):
+        mask[t, rng.choice(20, size=t, replace=False)] = True  # 0..5 valid
+    m = jnp.asarray(mask)
+    k = 8
+    keep = np.asarray(pruning.topk_keep_mask(s, m, k))
+    stream = np.asarray(pruning.streaming_keep_mask(s, m, k, tile=8))
+    assert np.array_equal(keep, mask)
+    assert np.array_equal(stream, mask)
+    _, ids = pruning.streaming_topk(s, m, k, tile=8)
+    assert np.array_equal(np.asarray(ids >= 0).sum(1), mask.sum(1))
+
+
+def test_all_masked_rows_keep_nothing():
+    s = jnp.asarray(np.random.default_rng(5).normal(size=(3, 9)).astype(np.float32))
+    m = jnp.zeros((3, 9), bool)
+    assert not np.asarray(pruning.topk_keep_mask(s, m, 4)).any()
+    assert not np.asarray(pruning.streaming_keep_mask(s, m, 4, tile=4)).any()
+    vals, ids = pruning.streaming_topk(s, m, 4, tile=4)
+    assert np.all(np.asarray(ids) == -1)
+    assert np.all(np.asarray(vals) <= pruning.NEG / 2)

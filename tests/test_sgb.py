@@ -1,0 +1,282 @@
+"""Golden parity tests for the vectorized, degree-bucketed Semantic Graph
+Build against the seed's loop-based implementation.
+
+``_pad_csc_ref`` / ``_compose_ref`` below are verbatim copies of the seed's
+per-vertex/per-B loop builds — the golden oracles. The vectorized build must
+reproduce them edge-for-edge whenever no random overflow down-sampling is
+involved, and match them in the set sense when it is. The bucketed layout
+must be a pure re-layout: identical edges, identical logits on every model.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hetgraph, pipeline
+from repro.core.flows import FlowConfig
+from repro.data import synthetic
+
+
+# --------------------------------------------------------------------------
+# seed (loop-based) golden references. The seed _pad_csc loop lives in
+# benchmarks/sgb_build.py (it doubles as the speedup-row baseline there);
+# a single shared copy keeps the parity oracle and the benchmark baseline
+# from drifting apart.
+# --------------------------------------------------------------------------
+
+from benchmarks.sgb_build import _pad_csc_loop as _pad_csc_ref  # noqa: E402
+
+
+def _compose_ref(ab, bc, cap_fanout, rng):
+    """Seed ``_compose``: per-B Python loop (the golden oracle)."""
+    a, b1 = ab
+    b2, c = bc
+    o1 = np.argsort(b1, kind="stable")
+    a, b1 = a[o1], b1[o1]
+    o2 = np.argsort(b2, kind="stable")
+    b2, c = b2[o2], c[o2]
+    n_b = int(max(b1.max(initial=-1), b2.max(initial=-1))) + 1
+    c1 = np.bincount(b1, minlength=n_b)
+    c2 = np.bincount(b2, minlength=n_b)
+    s1 = np.concatenate([[0], np.cumsum(c1)[:-1]])
+    s2 = np.concatenate([[0], np.cumsum(c2)[:-1]])
+    outs_a, outs_c = [], []
+    for b in range(n_b):
+        if c1[b] == 0 or c2[b] == 0:
+            continue
+        left = a[s1[b]: s1[b] + c1[b]]
+        right = c[s2[b]: s2[b] + c2[b]]
+        if len(left) * len(right) > cap_fanout:
+            k = cap_fanout
+            li = rng.integers(0, len(left), size=k)
+            ri = rng.integers(0, len(right), size=k)
+            outs_a.append(left[li])
+            outs_c.append(right[ri])
+        else:
+            outs_a.append(np.repeat(left, len(right)))
+            outs_c.append(np.tile(right, len(left)))
+    if not outs_a:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    return np.concatenate(outs_a), np.concatenate(outs_c)
+
+
+def _random_edges(rng, num_targets, num_src, num_edges, num_etypes=1):
+    src = rng.integers(0, num_src, size=num_edges).astype(np.int64)
+    dst = rng.integers(0, num_targets, size=num_edges).astype(np.int64)
+    ety = rng.integers(0, num_etypes, size=num_edges).astype(np.int64)
+    return src, dst, ety
+
+
+# --------------------------------------------------------------------------
+# _pad_csc golden parity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(12))
+def test_pad_csc_matches_ref_edge_for_edge(seed):
+    """No overflow (max_degree=None): bit-identical to the seed loop build,
+    including slot order (the pruner's tie-breaking depends on it)."""
+    rng = np.random.default_rng(seed)
+    t = int(rng.integers(1, 60))
+    e = int(rng.integers(0, 500))
+    src, dst, ety = _random_edges(rng, t, 100, e, num_etypes=4)
+    got = hetgraph._pad_csc(src, dst, t, None, np.random.default_rng(seed), ety)
+    want = _pad_csc_ref(src, dst, t, None, np.random.default_rng(seed), ety)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pad_csc_overflow_semantics(seed):
+    """With a degree cap: per-row counts equal min(deg, cap), kept neighbors
+    are a subset of the true multiset, rows under the cap keep their exact
+    arrival order (matching the ref)."""
+    rng = np.random.default_rng(seed)
+    t, e, cap = 24, 600, 8
+    src, dst, ety = _random_edges(rng, t, 50, e)
+    nbr, msk, _ = hetgraph._pad_csc(src, dst, t, cap, np.random.default_rng(seed))
+    counts = np.bincount(dst, minlength=t)
+    np.testing.assert_array_equal(msk.sum(1), np.minimum(counts, cap))
+    order = np.argsort(dst, kind="stable")
+    ss, dd = src[order], dst[order]
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    ref_nbr, ref_msk, _ = _pad_csc_ref(src, dst, t, cap, np.random.default_rng(seed))
+    for v in range(t):
+        row_true = ss[starts[v]: starts[v] + counts[v]]
+        kept = nbr[v][msk[v]]
+        # multiset-subset of the true in-neighbors
+        tc = np.bincount(row_true, minlength=50)
+        kc = np.bincount(kept, minlength=50)
+        assert (kc <= tc).all()
+        if counts[v] <= cap:  # intact rows: exact arrival order, as in ref
+            np.testing.assert_array_equal(kept, row_true)
+            np.testing.assert_array_equal(kept, ref_nbr[v][ref_msk[v]])
+
+
+def test_pad_csc_empty_and_degenerate():
+    empty = np.zeros(0, np.int64)
+    nbr, msk, ety = hetgraph._pad_csc(empty, empty, 5, None, np.random.default_rng(0))
+    assert nbr.shape == (5, 1) and not msk.any()
+    # single edge
+    nbr, msk, _ = hetgraph._pad_csc(
+        np.array([7]), np.array([2]), 4, None, np.random.default_rng(0)
+    )
+    assert nbr[2, 0] == 7 and msk.sum() == 1
+
+
+# --------------------------------------------------------------------------
+# _compose golden parity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(10))
+def test_compose_matches_ref_edge_for_edge(seed):
+    """No fan-out capping: bit-identical join output (same pair order)."""
+    rng = np.random.default_rng(seed)
+    e1, e2 = int(rng.integers(0, 300)), int(rng.integers(0, 300))
+    ab = (rng.integers(0, 60, e1).astype(np.int64), rng.integers(0, 30, e1).astype(np.int64))
+    bc = (rng.integers(0, 30, e2).astype(np.int64), rng.integers(0, 50, e2).astype(np.int64))
+    got = hetgraph._compose(ab, bc, 10**9, np.random.default_rng(seed))
+    want = _compose_ref(ab, bc, 10**9, np.random.default_rng(seed))
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+
+
+def test_compose_fanout_cap():
+    """Capped blocks emit exactly cap_fanout pairs drawn from the block."""
+    b = np.zeros(40, np.int64)
+    ab = (np.arange(40, dtype=np.int64), b)
+    bc = (b, np.arange(40, dtype=np.int64) + 100)
+    a, c = hetgraph._compose(ab, bc, 100, np.random.default_rng(0))
+    assert len(a) == len(c) == 100
+    assert set(a.tolist()) <= set(range(40))
+    assert set(c.tolist()) <= set(range(100, 140))
+
+
+# --------------------------------------------------------------------------
+# bucketed layout: pure re-layout of the flat build
+# --------------------------------------------------------------------------
+
+def _flat_and_bucketed(builder, *args, **kw):
+    flat = builder(*args, **kw, bucket_sizes=None)
+    buck = builder(*args, **kw, bucket_sizes=(8, 32, 128))
+    if isinstance(flat, dict):
+        return list(flat.values()), list(buck.values())
+    return flat, buck
+
+
+@pytest.mark.parametrize("dataset", ["acm", "imdb"])
+def test_bucketed_build_is_pure_relayout(dataset):
+    g = synthetic.DATASETS[dataset](scale=0.05, seed=0)
+    mps = synthetic.METAPATHS[dataset]
+    for builder, args in [
+        (hetgraph.build_metapath_graphs, (g, mps)),
+        (hetgraph.build_relation_graphs, (g,)),
+        (hetgraph.build_union_graph, (g,)),
+    ]:
+        flats, bucks = _flat_and_bucketed(builder, *args, max_degree=64, seed=0)
+        for sf, sb in zip(flats, bucks):
+            assert isinstance(sb, hetgraph.BucketedSemanticGraph)
+            # partition: every target in exactly one bucket
+            all_t = np.concatenate([b.targets for b in sb.buckets])
+            assert len(all_t) == sf.num_targets
+            assert len(np.unique(all_t)) == sf.num_targets
+            # tightest-bucket routing
+            deg = sf.degrees()
+            caps = sb.bucket_capacities
+            for b in sb.buckets:
+                d = deg[b.targets]
+                assert (d <= b.capacity).all()
+                tighter = [c for c in caps if c < b.capacity]
+                if tighter:
+                    assert (d > max(tighter)).all()
+            # flat reconstruction is edge-for-edge identical
+            np.testing.assert_array_equal(sf.nbr_idx, sb.nbr_idx)
+            np.testing.assert_array_equal(sf.nbr_mask, sb.nbr_mask)
+            np.testing.assert_array_equal(sf.edge_type, sb.edge_type)
+            np.testing.assert_array_equal(sf.degrees(), sb.degrees())
+            assert sf.num_edges == sb.num_edges
+            # and the bucketed layout never pays more padded slots
+            assert sb.padded_slots() <= sf.padded_slots()
+
+
+# --------------------------------------------------------------------------
+# logits parity: flat vs bucketed × staged vs fused vs fused_kernel,
+# all three models × two synthetic datasets
+# --------------------------------------------------------------------------
+
+MODELS = ["han", "rgat", "simple_hgn"]
+DATASETS = ["acm", "imdb"]
+
+
+@pytest.fixture(scope="module")
+def paired_tasks():
+    out = {}
+    for m in MODELS:
+        for d in DATASETS:
+            out[(m, d)] = (
+                pipeline.prepare(m, d, scale=0.03, max_degree=32, seed=0,
+                                 bucket_sizes=None),
+                pipeline.prepare(m, d, scale=0.03, max_degree=32, seed=0,
+                                 bucket_sizes=(4, 8, 16)),
+            )
+    return out
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("dataset", DATASETS)
+def test_bucketed_matches_flat_staged(paired_tasks, model, dataset):
+    flat, buck = paired_tasks[(model, dataset)]
+    a = np.asarray(flat.logits(flat.params, FlowConfig("staged")))
+    b = np.asarray(buck.logits(buck.params, FlowConfig("staged")))
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("dataset", DATASETS)
+def test_bucketed_flows_agree(paired_tasks, model, dataset):
+    """staged_pruned vs fused vs fused_kernel on the bucketed layout, and
+    each against the flat staged_pruned baseline."""
+    flat, buck = paired_tasks[(model, dataset)]
+    k = 6
+    base = np.asarray(flat.logits(flat.params, FlowConfig("staged_pruned", prune_k=k)))
+    staged_b = np.asarray(buck.logits(buck.params, FlowConfig("staged_pruned", prune_k=k)))
+    fused_b = np.asarray(buck.logits(buck.params, FlowConfig("fused", prune_k=k)))
+    kernel_b = np.asarray(buck.logits(buck.params, FlowConfig("fused_kernel", prune_k=k)))
+    np.testing.assert_allclose(base, staged_b, atol=1e-5)
+    np.testing.assert_allclose(base, fused_b, atol=1e-5)
+    np.testing.assert_allclose(base, kernel_b, atol=1e-5)
+
+
+def test_bucket_bypass_routing():
+    """Buckets with capacity ≤ prune_k take the §4.3 bypass: per-bucket NA
+    under the fused flow equals plain staged (unpruned) NA on exactly the
+    targets of those buckets — the retention domain is a no-op for them."""
+    from repro.core import attention
+    from repro.core.flows import run_aggregate_graph
+
+    rng = np.random.default_rng(0)
+    t, d, n, h, dh, k = 40, 24, 60, 4, 8, 8
+    src = rng.integers(0, n, size=600).astype(np.int64)
+    dst = rng.integers(0, t, size=600).astype(np.int64)
+    nbr, msk, ety = hetgraph._pad_csc(src, dst, t, d, np.random.default_rng(1))
+    sg = hetgraph.bucketize("b", ("x",), "x", nbr, msk, ety, (4, 8, 16))
+    low = np.concatenate(
+        [b.targets for b in sg.buckets if b.capacity <= k]
+    ).astype(np.int64)
+    assert low.size > 0, "test graph must have low-degree targets"
+    h_proj = jnp.asarray(rng.normal(size=(n, h, dh)), jnp.float32)
+    scores = attention.DecomposedScores(
+        jnp.asarray(rng.normal(size=(n, h)), jnp.float32),
+        jnp.asarray(rng.normal(size=(t, h)), jnp.float32),
+    )
+    unpruned = np.asarray(
+        run_aggregate_graph(FlowConfig("staged"), h_proj, scores, sg)
+    )
+    fused = np.asarray(
+        run_aggregate_graph(FlowConfig("fused", prune_k=k), h_proj, scores, sg)
+    )
+    # bypass buckets: bit-close to unpruned NA (no retention-domain effect)
+    np.testing.assert_allclose(unpruned[low], fused[low], atol=1e-6)
+    # and pruning does bite somewhere on the high-degree buckets
+    high = np.setdiff1d(np.arange(t), low)
+    deg = sg.degrees()
+    assert (deg[high] > k).any()
+    assert np.abs(unpruned[high] - fused[high]).max() > 1e-4

@@ -5,12 +5,15 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.optim import adafactor, adamw
 from repro.optim.schedules import cosine_schedule, linear_warmup
 from repro.runtime import TrainConfig, Trainer
 from repro.runtime.straggler import StragglerMonitor
+
+pytestmark = pytest.mark.slow
 
 
 def test_short_training_loss_decreases(tmp_path):
