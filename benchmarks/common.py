@@ -1,7 +1,18 @@
-"""Benchmark utilities."""
+"""Benchmark utilities.
+
+``emit`` prints the CSV row every benchmark has always printed AND records
+it in a ``BENCH_<script>.json`` file in the working directory (override the
+path with ``BENCH_JSON=...``). Rows are keyed by name — re-running a
+benchmark updates its rows in place — so committing the file gives a
+per-PR trajectory of every measured quantity under plain ``git log -p``.
+"""
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
+from pathlib import Path
 
 import jax
 
@@ -19,5 +30,39 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return ts[len(ts) // 2]
 
 
+def bench_json_path() -> Path:
+    """BENCH file for the *emitting benchmark module*: the nearest caller
+    frame outside this module (not ``sys.argv[0]``), so rows land in the
+    same per-benchmark file whether a module runs standalone or via
+    ``benchmarks/run.py`` — and wrappers around ``emit`` defined in
+    ``common`` don't misattribute. ``BENCH_JSON`` overrides."""
+    env = os.environ.get("BENCH_JSON")
+    if env:
+        return Path(env)
+    stem = ""
+    frame = sys._getframe(1)
+    while frame is not None:
+        mod = frame.f_globals.get("__name__", "")
+        if mod and mod != __name__:
+            stem = mod.rsplit(".", 1)[-1]
+            break
+        frame = frame.f_back
+    if not stem or stem == "__main__":
+        stem = Path(sys.argv[0]).stem or "bench"
+    return Path(f"BENCH_{stem}.json")
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    path = bench_json_path()
+    rows = []
+    if path.exists():
+        try:
+            rows = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            rows = []
+    rows = [r for r in rows if r.get("name") != name]
+    rows.append(
+        {"name": name, "us_per_call": round(us_per_call, 1), "derived": derived}
+    )
+    path.write_text(json.dumps(rows, indent=1) + "\n")

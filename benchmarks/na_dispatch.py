@@ -1,0 +1,183 @@
+"""NA dispatch cost — legacy per-bucket loop vs single-launch bucketed NA.
+
+PR 1 made SGB degree-bucketed but left NA as an eager Python loop: one
+``pallas_call`` pair (or one jitted jnp region), one full-table θ_*v
+gather, and one ``out.at[targets].set`` scatter PER BUCKET, per semantic
+graph, per layer. This benchmark measures what collapsing that loop into a
+single dispatch per semantic graph (the grouped ragged-grid kernel / one
+jit region, ``FlowConfig.bucket_dispatch="single"``) buys:
+
+  * wall time of the full NA stage (every semantic graph of the model),
+    eager invocation — the serving path where dispatch overhead is real;
+  * kernel-launch count (``kernel.DISPATCH`` counts pallas_call sites
+    traced after a cache clear = launches one forward dispatches) and
+    per-bucket dispatch count (``flows.DISPATCH``);
+  * retrace count of the single-dispatch jit region;
+  * padded-slot cost of autotuned vs static bucket capacities.
+
+Asserted invariants (CI runs ``--smoke``):
+  * single-dispatch bucketed NA is ONE pallas_call pair per semantic graph;
+  * on a ≥ 4-bucket layout the single launch beats the per-bucket loop by
+    ≥ 2x wall time (asserted on the dispatch-dominated small graph);
+  * autotuned capacities never pay more padded slots than the static
+    ``{8, 32, 128, D_max}`` default.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import flows, hetgraph, pipeline
+from repro.core.attention import DecomposedScores
+from repro.core.flows import FlowConfig, run_aggregate_graph
+from repro.kernels.fused_prune_aggregate import kernel as fpa_kernel
+
+# capacities chosen to split the small graphs' degree histograms into ≥ 4
+# buckets (the static default {8, 32, 128, D_max} collapses to 2-3 buckets
+# at benchmark scale)
+BUCKETS = (4, 8, 16, 32)
+HEADS, DH = 4, 8
+PRUNE_K = 8
+
+
+def _na_stage(task, rng):
+    """The model's NA stage on synthetic coefficients: h', θ_u*, θ_*v (and
+    the per-edge-type term for union graphs) per semantic graph. Score
+    values don't affect NA cost; this isolates dispatch + aggregation."""
+    n = task.graph.total_nodes
+    h_proj = jnp.asarray(rng.normal(size=(n, HEADS, DH)), jnp.float32)
+    theta_src = jnp.asarray(rng.normal(size=(n, HEADS)), jnp.float32)
+    per_sg = []
+    for sg in task.sgs:
+        theta_dst = jnp.asarray(
+            rng.normal(size=(sg.num_targets, HEADS)), jnp.float32
+        )
+        theta_rel = None
+        if sg.num_edge_types > 1:
+            theta_rel = jnp.asarray(
+                rng.normal(size=(sg.num_edge_types, HEADS)), jnp.float32
+            )
+        per_sg.append((sg, DecomposedScores(theta_src, theta_dst, theta_rel)))
+
+    def run(cfg):
+        return [
+            run_aggregate_graph(cfg, h_proj, sc, sg) for sg, sc in per_sg
+        ]
+
+    return run, per_sg, h_proj
+
+
+def _reset_counters():
+    flows.DISPATCH.update(graph_calls=0, bucket_calls=0, traces=0)
+    fpa_kernel.DISPATCH.update(pallas_calls=0, grouped_traces=0)
+
+
+def bench_model(model: str, size: str, scale: float, assert_speedup: bool):
+    task = pipeline.prepare(
+        model, "imdb", scale=scale, max_degree=64, seed=0, bucket_sizes=BUCKETS
+    )
+    n_buckets = [len(sg.buckets) for sg in task.sgs]
+    rng = np.random.default_rng(0)
+    run, per_sg, h_proj = _na_stage(task, rng)
+
+    for flow in ("fused", "fused_kernel"):
+        single = FlowConfig(flow, prune_k=PRUNE_K)
+        loop = FlowConfig(flow, prune_k=PRUNE_K, bucket_dispatch="loop")
+
+        # launch accounting: fresh jit caches, then ONE eager NA stage
+        jax.clear_caches()
+        _reset_counters()
+        jax.block_until_ready(run(single))
+        pairs_single = fpa_kernel.DISPATCH["pallas_calls"] // 2
+        traces = (
+            flows.DISPATCH["traces"] + fpa_kernel.DISPATCH["grouped_traces"]
+        )
+        jax.clear_caches()
+        _reset_counters()
+        jax.block_until_ready(run(loop))
+        pairs_loop = fpa_kernel.DISPATCH["pallas_calls"] // 2
+        bucket_calls = flows.DISPATCH["bucket_calls"]
+
+        # wall time: the jnp `fused` flow is the CPU production path and
+        # carries the asserted speedup; `fused_kernel` wall times are
+        # interpret-mode emulation (kernel bodies as tiny XLA loop steps —
+        # see kernels_micro.py) and are reported for the launch counts, not
+        # compared (iters kept minimal)
+        iters, warmup = (3, 2) if flow == "fused" else (1, 1)
+        t_loop = time_fn(lambda: run(loop), iters=iters, warmup=warmup)
+        t_single = time_fn(lambda: run(single), iters=iters, warmup=warmup)
+        speedup = t_loop / t_single
+        emit(
+            f"na_dispatch_{size}_{model}_{flow}_loop", t_loop * 1e6,
+            f"bucket_calls_per_fwd={bucket_calls};pallas_pairs={pairs_loop}",
+        )
+        emit(
+            f"na_dispatch_{size}_{model}_{flow}_single", t_single * 1e6,
+            f"speedup_vs_loop={speedup:.2f}x;pallas_pairs={pairs_single}"
+            f";retraces={traces};buckets={n_buckets}",
+        )
+        if flow == "fused_kernel":
+            # the tentpole invariant: bucketed NA = ONE pallas_call pair
+            # per semantic graph, however many buckets the layout has (the
+            # loop path pays one pair per NON-bypass bucket, plus the jnp
+            # bypass dispatches counted in bucket_calls). Asserted graph by
+            # graph with a cleared cache — trace counting over the whole
+            # stage would undercount if two graphs happened to share shapes
+            # (jit-cache hit, no second trace)
+            for sg, sc in per_sg:
+                jax.clear_caches()
+                _reset_counters()
+                jax.block_until_ready(
+                    run_aggregate_graph(single, h_proj, sc, sg)
+                )
+                pairs = fpa_kernel.DISPATCH["pallas_calls"] // 2
+                assert pairs == 1, (
+                    f"{model}/{size}/{sg.name}: single-dispatch NA traced "
+                    f"{pairs} pallas pairs for one semantic graph"
+                )
+        if flow == "fused" and assert_speedup and max(n_buckets) >= 4:
+            assert speedup >= 2.0, (
+                f"{model}/{size}/{flow}: single-launch NA only "
+                f"{speedup:.2f}x over the per-bucket loop (need ≥ 2x)"
+            )
+
+    # autotuned vs static capacities: padded-slot accounting
+    static = pipeline.prepare(
+        model, "imdb", scale=scale, max_degree=64, seed=0,
+        bucket_sizes=hetgraph.DEFAULT_BUCKET_SIZES,
+    )
+    auto = pipeline.prepare(
+        model, "imdb", scale=scale, max_degree=64, seed=0, bucket_sizes="auto"
+    )
+    s_static = sum(sg.padded_slots() for sg in static.sgs)
+    s_auto = sum(sg.padded_slots() for sg in auto.sgs)
+    assert s_auto <= s_static, (model, size, s_auto, s_static)
+    emit(
+        f"na_autotune_padded_slots_{size}_{model}", 0.0,
+        f"static={s_static};auto={s_auto};cut={1 - s_auto / max(s_static, 1):.2%}",
+    )
+
+
+def main(smoke: bool = False):
+    # small: dispatch-dominated (the ≥ 2x claim is asserted here); medium:
+    # compute shows through but the launch invariant must still hold
+    sizes = [("small", 0.06, True)]
+    if not smoke:
+        sizes.append(("medium", 0.25, False))
+    models = ["rgat"] if smoke else ["han", "rgat", "simple_hgn"]
+    for size, scale, assert_speedup in sizes:
+        for model in models:
+            bench_model(model, size, scale, assert_speedup)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="small graph, one model, all asserts — the CI regression gate",
+    )
+    main(**vars(ap.parse_args()))

@@ -17,6 +17,7 @@ def main() -> None:
         fig8_memory_energy,
         fig9_accuracy,
         kernels_micro,
+        na_dispatch,
         roofline,
         sgb_build,
     )
@@ -24,6 +25,7 @@ def main() -> None:
     print("name,us_per_call,derived", flush=True)
     for mod in (
         sgb_build,
+        na_dispatch,
         fig2_disparity,
         fig3_overhead,
         fig7_speedup,

@@ -59,12 +59,31 @@ def decompose_scores(
 def slice_targets(scores: DecomposedScores, targets: jax.Array) -> DecomposedScores:
     """Restrict the target-side coefficients to a subset of target rows.
 
-    Used by the degree-bucketed NA path: θ_u* is a global per-source table
-    and stays whole; θ_*v is per-target and is gathered down to the bucket's
-    targets so per-bucket aggregation sees a dense (T_b, H) table.
+    θ_u* is a global per-source table and stays whole; θ_*v is per-target
+    and is gathered down to ``targets`` so aggregation sees a dense (T_b, H)
+    table. The single-dispatch bucketed NA path does this gather ONCE per
+    semantic graph (against the precomputed bucket permutation) and then
+    hands each bucket a contiguous view via :func:`narrow_targets`; calling
+    this per bucket — one O(T) gather each — is the legacy loop path.
     """
     return DecomposedScores(
         scores.theta_src, scores.theta_dst[targets], scores.theta_rel
+    )
+
+
+def narrow_targets(
+    scores: DecomposedScores, start: int, size: int
+) -> DecomposedScores:
+    """A contiguous-view restriction of the target-side coefficients.
+
+    ``start``/``size`` are trace-time Python ints, so this is a static
+    slice — no index arrays, no gather. Used per bucket after θ_*v has been
+    reordered into bucket-concatenation order.
+    """
+    return DecomposedScores(
+        scores.theta_src,
+        jax.lax.slice_in_dim(scores.theta_dst, start, start + size),
+        scores.theta_rel,
     )
 
 

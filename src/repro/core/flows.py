@@ -8,15 +8,27 @@
 
 Two entry points: ``run_aggregate`` operates on raw padded-CSC arrays;
 ``run_aggregate_graph`` accepts either a flat ``SemanticGraph`` or a
-degree-bucketed ``BucketedSemanticGraph`` and, for the latter, runs NA once
-per bucket and scatters per-bucket outputs back into target order. Buckets
-whose capacity is ≤ ``prune_k`` hit the paper's §4.3 pruner bypass inside
-``run_aggregate`` (their retention domain is a no-op), so low-degree targets
-never pay for the pruning machinery.
+degree-bucketed ``BucketedSemanticGraph``.
+
+Bucketed NA is SINGLE-DISPATCH: one call per semantic graph, not one per
+bucket. ``fused_kernel`` routes to the grouped ragged-grid kernel — every
+bucket in ONE ``pallas_call`` pair, driven by the graph's
+``GroupedBucketLayout`` — and the jnp flows trace all buckets into one jit
+region that gathers θ_*v once into bucket-concatenation order, hands each
+bucket a contiguous view, and restores target order with the precomputed
+inverse-permutation gather (no per-bucket ``out.at[targets].set`` scatters,
+no per-bucket O(T) score gathers). Buckets whose capacity is ≤ ``prune_k``
+still hit the paper's §4.3 pruner bypass — inside the kernel (a direct
+slot copy) or via the static per-bucket routing in ``run_aggregate``.
+
+``FlowConfig.bucket_dispatch="loop"`` keeps the legacy one-dispatch-per-
+bucket path (eager Python loop + per-bucket scatters) for benchmarks and
+golden parity tests; see ``benchmarks/na_dispatch.py``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Union
 
 import jax
@@ -25,15 +37,25 @@ import jax.numpy as jnp
 from repro.core import attention
 from repro.core.hetgraph import BucketedSemanticGraph, SemanticGraph
 
+# Python-side dispatch accounting (reset by benchmarks):
+#   graph_calls  — run_aggregate_graph entries on bucketed graphs
+#   bucket_calls — per-bucket NA dispatches issued by the legacy loop path
+#   traces       — retraces of the single-dispatch jit region
+DISPATCH = {"graph_calls": 0, "bucket_calls": 0, "traces": 0}
+
 
 @dataclasses.dataclass(frozen=True)
 class FlowConfig:
     flow: str = "staged"
     prune_k: Optional[int] = None
     tile: int = 128
+    # "single": one dispatch per semantic graph (grouped kernel / one jit
+    # region). "loop": legacy per-bucket loop, kept for benchmarks/parity.
+    bucket_dispatch: str = "single"
 
     def __post_init__(self):
         assert self.flow in ("staged", "staged_pruned", "fused", "fused_kernel")
+        assert self.bucket_dispatch in ("single", "loop")
 
 
 def run_aggregate(
@@ -71,6 +93,80 @@ def run_aggregate(
     )
 
 
+def _device_tables(sg: BucketedSemanticGraph, use_ety: bool):
+    """jnp mirrors of the bucket tables + concat order + inverse perm,
+    cached on the graph so repeated layers/steps ship no host arrays."""
+    key = ("tables", use_ety)
+    if key not in sg._device:
+        # the first call may come from inside an outer jit trace (training
+        # step); force eager conversion so the cache holds concrete arrays,
+        # not tracers
+        with jax.ensure_compile_time_eval():
+            tables = tuple(
+                (
+                    jnp.asarray(b.nbr_idx),
+                    jnp.asarray(b.nbr_mask),
+                    jnp.asarray(b.edge_type) if use_ety else None,
+                )
+                for b in sg.buckets
+                if b.num_targets > 0
+            )
+            sg._device[key] = (
+                tables,
+                jnp.asarray(sg.concat_targets()),
+                jnp.asarray(sg.target_perm()),
+            )
+    return sg._device[key]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _bucketed_aggregate(cfg, h_proj, scores, tables, order, perm):
+    """All buckets of one semantic graph in ONE jit region.
+
+    θ_*v is gathered once into bucket-concatenation order; each bucket gets
+    a contiguous view of it (static slice, no per-bucket gather); the
+    concatenated result returns to target order with a single
+    inverse-permutation gather.
+    """
+    DISPATCH["traces"] += 1
+    ordered = attention.DecomposedScores(
+        scores.theta_src, scores.theta_dst[order], scores.theta_rel
+    )
+    outs, off = [], 0
+    for nbr, msk, ety in tables:
+        t_b = nbr.shape[0]
+        sc = attention.narrow_targets(ordered, off, t_b)
+        outs.append(run_aggregate(cfg, h_proj, sc, nbr, msk, ety))
+        off += t_b
+    return jnp.concatenate(outs, axis=0)[perm]
+
+
+def run_aggregate_graph_bucket_loop(
+    cfg: FlowConfig,
+    h_proj: jax.Array,
+    scores: attention.DecomposedScores,
+    sg: BucketedSemanticGraph,
+) -> jax.Array:
+    """LEGACY per-bucket dispatch: one NA call, one full-table θ_*v gather,
+    and one ``out.at[targets].set`` scatter per bucket, driven by an eager
+    Python loop. Superseded by the single-dispatch path; kept as the
+    benchmark baseline (``benchmarks/na_dispatch.py``) and parity oracle.
+    """
+    use_ety = scores.theta_rel is not None
+    _, h, dh = h_proj.shape
+    out = jnp.zeros((sg.num_targets, h, dh), h_proj.dtype)
+    for b in sg.buckets:
+        DISPATCH["bucket_calls"] += 1
+        targets = jnp.asarray(b.targets)
+        z = run_aggregate(
+            cfg, h_proj, attention.slice_targets(scores, targets),
+            jnp.asarray(b.nbr_idx), jnp.asarray(b.nbr_mask),
+            jnp.asarray(b.edge_type) if use_ety else None,
+        )
+        out = out.at[targets].set(z)
+    return out
+
+
 def run_aggregate_graph(
     cfg: FlowConfig,
     h_proj: jax.Array,
@@ -80,21 +176,30 @@ def run_aggregate_graph(
     """NA over a semantic graph. Returns (num_targets, H, dh).
 
     ``scores.theta_dst`` must cover the graph's full target range (one row
-    per ``dst_type`` vertex, in local order).
+    per ``dst_type`` vertex, in local order). Bucketed graphs run as one
+    dispatch (see module docstring) unless ``cfg.bucket_dispatch="loop"``.
     """
     use_ety = scores.theta_rel is not None
     if isinstance(sg, BucketedSemanticGraph):
-        _, h, dh = h_proj.shape
-        out = jnp.zeros((sg.num_targets, h, dh), h_proj.dtype)
-        for b in sg.buckets:
-            targets = jnp.asarray(b.targets)
-            z = run_aggregate(
-                cfg, h_proj, attention.slice_targets(scores, targets),
-                jnp.asarray(b.nbr_idx), jnp.asarray(b.nbr_mask),
-                jnp.asarray(b.edge_type) if use_ety else None,
-            )
-            out = out.at[targets].set(z)
-        return out
+        DISPATCH["graph_calls"] += 1
+        if cfg.bucket_dispatch == "loop":
+            return run_aggregate_graph_bucket_loop(cfg, h_proj, scores, sg)
+        if cfg.flow == "fused_kernel":
+            from repro.kernels.fused_prune_aggregate import ops as k_ops
+
+            # the kernel accumulates in f32; cast back like the loop path's
+            # at[].set into an h_proj.dtype buffer, so the dispatch switch
+            # never changes the output dtype
+            return k_ops.fused_prune_aggregate_grouped(
+                h_proj, scores.theta_src, scores.theta_dst, sg,
+                theta_rel=scores.theta_rel, prune_k=cfg.prune_k,
+                slope=attention.LEAKY_SLOPE,
+            ).astype(h_proj.dtype)
+        tables, order, perm = _device_tables(sg, use_ety)
+        if not tables:
+            _, h, dh = h_proj.shape
+            return jnp.zeros((sg.num_targets, h, dh), h_proj.dtype)
+        return _bucketed_aggregate(cfg, h_proj, scores, tables, order, perm)
     return run_aggregate(
         cfg, h_proj, scores,
         jnp.asarray(sg.nbr_idx), jnp.asarray(sg.nbr_mask),

@@ -25,6 +25,24 @@ Layouts:
     domain is a no-op, so the fused flow routes them straight to plain
     aggregation.
 
+Bucket capacities come either from a static list (``DEFAULT_BUCKET_SIZES``)
+or from :func:`autotune_bucket_sizes` (``bucket_sizes="auto"``), which
+segments the observed degree histogram to minimize padded slots plus a
+per-bucket launch-cost term under a max-buckets budget.
+
+Execution-side companions precomputed here at build time:
+
+  * ``BucketedSemanticGraph.target_perm()`` — for each target, its row in
+    the bucket-concatenated output, so NA can emit one concatenated result
+    and restore target order with a single inverse-permutation gather
+    (instead of one ``out.at[targets].set`` scatter per bucket).
+  * ``BucketedSemanticGraph.grouped()`` — a :class:`GroupedBucketLayout`:
+    every bucket's padded-CSC table re-tiled into one grid-ordered stack of
+    ``(t_tile, w)`` tiles plus per-grid-step metadata (output row block,
+    D-tile index/count, owning bucket), which lets a single ragged-grid
+    ``pallas_call`` pair run NA for *all* buckets in one launch — narrow
+    buckets iterate fewer D-tiles instead of padding to the global D_max.
+
 The whole build is vectorized numpy (stable argsort + cumsum + flat
 scatter); there are no per-vertex or per-intermediate-vertex Python loops
 anywhere in SGB (the only loops left iterate over relations, metapaths, or
@@ -147,14 +165,131 @@ class DegreeBucket:
 
 
 @dataclasses.dataclass
+class GroupedBucketLayout:
+    """All buckets of a :class:`BucketedSemanticGraph` flattened into one
+    ragged-grid tile stack for single-launch NA.
+
+    Rows (targets) of each bucket are padded to a multiple of ``t_tile`` and
+    capacities to a multiple of ``w``; every ``(t_tile, w)`` tile of every
+    bucket is then stored **in grid-visit order** (bucket-major, row-tile
+    next, D-tile innermost), so a grid-step-``g`` kernel reads tile ``g``
+    with an identity index map and only the *output* index map needs the
+    prefetched ``step_row`` scalar. Narrow buckets contribute fewer D-tiles
+    per row — the padded-slot savings of the bucketed layout survive the
+    grouping untouched (up to ``w``-alignment).
+
+    ``perm`` maps each target to its padded grouped row, so target order is
+    restored with one gather after the launch. All arrays are numpy; device
+    mirrors are cached by the kernel wrapper keyed on this object.
+    """
+
+    t_tile: int
+    w: int
+    nbr: np.ndarray  # (G, t_tile, w) int32 grid-ordered neighbor-id tiles
+    msk: np.ndarray  # (G, t_tile, w) bool
+    ety: np.ndarray  # (G, t_tile, w) int32
+    step_row: np.ndarray  # (G,) int32 — output/θ_*v row block of step g
+    step_dt: np.ndarray  # (G,) int32 — D-tile index within the row block
+    step_ndt: np.ndarray  # (G,) int32 — total D-tiles of step g's bucket
+    step_bucket: np.ndarray  # (G,) int32 — owning bucket of step g
+    caps: np.ndarray  # (B,) int32 true bucket capacities
+    caps_pad: np.ndarray  # (B,) int32 w-aligned capacities
+    row_targets: np.ndarray  # (num_rows,) int32 target id per row (0 on pad)
+    perm: np.ndarray  # (num_targets,) int32 grouped row of each target
+    num_rows: int  # total padded rows across buckets
+
+    @property
+    def num_steps(self) -> int:
+        return self.nbr.shape[0]
+
+
+def _group_buckets(
+    buckets: Sequence[DegreeBucket],
+    num_targets: int,
+    t_tile: int,
+    w: int,
+) -> GroupedBucketLayout:
+    """Re-tile per-bucket padded-CSC tables into grid order (see
+    :class:`GroupedBucketLayout`). Pure relayout: every valid slot keeps its
+    (target, slot-position) identity; padding rows/columns are mask-False."""
+    tiles_n, tiles_m, tiles_e = [], [], []
+    step_row, step_dt, step_ndt, step_bucket = [], [], [], []
+    caps, caps_pad, row_targets = [], [], []
+    perm = np.zeros(num_targets, dtype=np.int32)
+    row_off = 0  # in units of rows
+    for bi, b in enumerate(buckets):
+        t_b, d_b = b.nbr_idx.shape
+        caps.append(d_b)
+        cap_p = max(-(-d_b // w) * w, w)
+        caps_pad.append(cap_p)
+        if t_b == 0:
+            continue
+        rows_p = -(-t_b // t_tile) * t_tile
+        n_dt = cap_p // w
+        n_rt = rows_p // t_tile
+
+        def padded(a, fill, dtype):
+            out = np.full((rows_p, cap_p), fill, dtype=dtype)
+            out[:t_b, :d_b] = a
+            return out
+
+        for a, fill, dtype, acc in (
+            (b.nbr_idx, 0, np.int32, tiles_n),
+            (b.nbr_mask, False, bool, tiles_m),
+            (b.edge_type, 0, np.int32, tiles_e),
+        ):
+            p = padded(a, fill, dtype)
+            # (n_rt, t_tile, n_dt, w) -> grid order (row tile, then D tile)
+            p = p.reshape(n_rt, t_tile, n_dt, w).transpose(0, 2, 1, 3)
+            acc.append(p.reshape(n_rt * n_dt, t_tile, w))
+        rb0 = row_off // t_tile
+        step_row.append(np.repeat(np.arange(rb0, rb0 + n_rt), n_dt))
+        step_dt.append(np.tile(np.arange(n_dt), n_rt))
+        step_ndt.append(np.full(n_rt * n_dt, n_dt))
+        step_bucket.append(np.full(n_rt * n_dt, bi))
+        rt = np.zeros(rows_p, dtype=np.int32)
+        rt[:t_b] = b.targets
+        row_targets.append(rt)
+        perm[b.targets] = row_off + np.arange(t_b, dtype=np.int32)
+        row_off += rows_p
+
+    def cat(parts, dtype):
+        if not parts:
+            return np.zeros((0,), dtype=dtype)
+        return np.concatenate(parts).astype(dtype)
+
+    return GroupedBucketLayout(
+        t_tile=t_tile,
+        w=w,
+        nbr=(np.concatenate(tiles_n) if tiles_n
+             else np.zeros((0, t_tile, w), np.int32)),
+        msk=(np.concatenate(tiles_m) if tiles_m
+             else np.zeros((0, t_tile, w), bool)),
+        ety=(np.concatenate(tiles_e) if tiles_e
+             else np.zeros((0, t_tile, w), np.int32)),
+        step_row=cat(step_row, np.int32),
+        step_dt=cat(step_dt, np.int32),
+        step_ndt=cat(step_ndt, np.int32),
+        step_bucket=cat(step_bucket, np.int32),
+        caps=np.asarray(caps, np.int32),
+        caps_pad=np.asarray(caps_pad, np.int32),
+        row_targets=cat(row_targets, np.int32),
+        perm=perm,
+        num_rows=row_off,
+    )
+
+
+@dataclasses.dataclass
 class BucketedSemanticGraph:
     """A semantic graph as a small set of degree buckets.
 
     Every target of ``dst_type`` lands in exactly one bucket — the tightest
     capacity that fits its (possibly build-time-capped) degree — so the
-    buckets' target sets partition ``range(num_targets)``. NA runs per
-    bucket and scatters results back into target order; buckets whose
-    capacity is ≤ the pruner's K take the §4.3 pruner-bypass path.
+    buckets' target sets partition ``range(num_targets)``. NA processes all
+    buckets in a single dispatch (one ragged-grid kernel launch, or one
+    jitted region on the jnp flows) and restores target order with the
+    precomputed inverse permutation; buckets whose capacity is ≤ the
+    pruner's K take the §4.3 pruner-bypass path.
 
     Flat-view accessors (``nbr_idx``/``nbr_mask``/``edge_type``) reconstruct
     the equivalent ``(T, D_max)`` table on demand (cached) so degree
@@ -170,6 +305,15 @@ class BucketedSemanticGraph:
     num_edge_types: int = 1
     _flat: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = dataclasses.field(
         default=None, init=False, repr=False, compare=False
+    )
+    _perm: Optional[np.ndarray] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
+    _grouped: Dict[Tuple[int, int], "GroupedBucketLayout"] = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False
+    )
+    _device: Dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False
     )
 
     @property
@@ -226,6 +370,35 @@ class BucketedSemanticGraph:
     @property
     def edge_type(self) -> np.ndarray:
         return self._flat_arrays()[2]
+
+    def concat_targets(self) -> np.ndarray:
+        """Target ids in bucket-concatenation order (NA's output order
+        before the inverse permutation restores target order)."""
+        if self.buckets:
+            return np.concatenate([b.targets for b in self.buckets])
+        return np.zeros(0, np.int32)
+
+    def target_perm(self) -> np.ndarray:
+        """``perm[t]`` = row of target ``t`` in the bucket-concatenated NA
+        output, so ``concat_out[perm]`` is in target order. Cached; computed
+        once at build time by :func:`bucketize`."""
+        if self._perm is None:
+            perm = np.zeros(self.num_targets, dtype=np.int32)
+            off = 0
+            for b in self.buckets:
+                perm[b.targets] = off + np.arange(b.num_targets, dtype=np.int32)
+                off += b.num_targets
+            self._perm = perm
+        return self._perm
+
+    def grouped(self, t_tile: int = 8, w: int = 8) -> GroupedBucketLayout:
+        """The single-launch ragged-grid relayout (cached per tile shape)."""
+        key = (t_tile, w)
+        if key not in self._grouped:
+            self._grouped[key] = _group_buckets(
+                self.buckets, self.num_targets, t_tile, w
+            )
+        return self._grouped[key]
 
 
 def _pad_csc(
@@ -296,6 +469,59 @@ def _pad_csc(
     return nbr, msk, ety
 
 
+def autotune_bucket_sizes(
+    degrees: np.ndarray,
+    max_buckets: int = 4,
+    round_to: int = 1,
+    launch_cost: float = 0.0,
+) -> Tuple[int, ...]:
+    """Choose bucket capacities from the observed degree histogram.
+
+    Optimal segmentation (DP over the unique degree values) minimizing
+
+        Σ_b  count_b × pad(cap_b)  +  launch_cost × num_buckets
+
+    under ``num_buckets ≤ max_buckets``, where ``pad`` rounds capacities up
+    to ``round_to`` (the grouped kernel's D-tile width, if you want the
+    objective to count tile padding). Capacities only ever need to sit on
+    observed degrees — any other boundary can be lowered to the largest
+    degree below it without changing the partition — so with the default
+    ``round_to=1``/``launch_cost=0`` the result is the true padded-slot
+    optimum for ≤ ``max_buckets`` buckets and never pays more padded slots
+    than any static capacity list of the same length (e.g. the old
+    ``{8, 32, 128, D_max}`` default).
+    """
+    deg = np.maximum(np.asarray(degrees, np.int64).ravel(), 1)
+    if deg.size == 0:
+        return (1,)
+    uniq, counts = np.unique(deg, return_counts=True)
+    m = len(uniq)
+    pad = lambda c: int(-(-int(c) // round_to) * round_to)
+    if m <= max_buckets and launch_cost == 0.0:
+        return tuple(int(u) for u in uniq)
+    max_buckets = min(max_buckets, m)
+    csum = np.concatenate([[0], np.cumsum(counts)])
+    # F[b, j] = min cost covering uniq[:j] with b buckets; PRED for backtrack
+    inf = float("inf")
+    f = np.full((max_buckets + 1, m + 1), inf)
+    pred = np.zeros((max_buckets + 1, m + 1), np.int64)
+    f[0, 0] = 0.0
+    for b in range(1, max_buckets + 1):
+        for j in range(1, m + 1):
+            seg_cap = pad(uniq[j - 1])
+            # segment (i, j]: targets with deg in (uniq[i-1], uniq[j-1]]
+            costs = f[b - 1, :j] + (csum[j] - csum[:j]) * seg_cap + launch_cost
+            i = int(np.argmin(costs))
+            f[b, j], pred[b, j] = costs[i], i
+    b = int(np.argmin(f[:, m]))
+    caps, j = [], m
+    while j > 0:
+        caps.append(int(uniq[j - 1]))
+        j = int(pred[b, j])
+        b -= 1
+    return tuple(sorted(caps))
+
+
 def bucketize(
     name: str,
     src_types: Tuple[str, ...],
@@ -303,7 +529,7 @@ def bucketize(
     nbr: np.ndarray,
     msk: np.ndarray,
     ety: np.ndarray,
-    bucket_sizes: Sequence[int],
+    bucket_sizes: Union[Sequence[int], str],
     num_edge_types: int = 1,
 ) -> BucketedSemanticGraph:
     """Partition a flat padded-CSC table into degree buckets.
@@ -311,12 +537,18 @@ def bucketize(
     Each target goes to the tightest capacity ≥ its degree; the last bucket
     has capacity D_max so every target has a home. Rows are left-packed in
     the flat table, so per-bucket tables are plain row/column slices —
-    edge-for-edge identical to the flat layout.
+    edge-for-edge identical to the flat layout. ``bucket_sizes="auto"``
+    derives the capacities from this table's own degree histogram via
+    :func:`autotune_bucket_sizes`.
     """
     t, d_max = nbr.shape
+    deg = msk.sum(axis=1)
+    if isinstance(bucket_sizes, str):
+        if bucket_sizes != "auto":
+            raise ValueError(f"unknown bucket_sizes spec {bucket_sizes!r}")
+        bucket_sizes = autotune_bucket_sizes(deg)
     caps = sorted({int(c) for c in bucket_sizes if 0 < c < d_max})
     caps.append(d_max)
-    deg = msk.sum(axis=1)
     # assignment = index of the first capacity >= degree
     assign = np.searchsorted(np.asarray(caps), deg, side="left")
     buckets = []
@@ -332,10 +564,12 @@ def bucketize(
                 edge_type=ety[targets, :cap],
             )
         )
-    return BucketedSemanticGraph(
+    sg = BucketedSemanticGraph(
         name=name, src_types=src_types, dst_type=dst_type,
         num_targets=t, buckets=tuple(buckets), num_edge_types=num_edge_types,
     )
+    sg.target_perm()  # precompute: NA's inverse-permutation gather needs it
+    return sg
 
 
 def _make_graph(
@@ -346,7 +580,7 @@ def _make_graph(
     msk: np.ndarray,
     ety: np.ndarray,
     num_edge_types: int,
-    bucket_sizes: Sequence[int] | None,
+    bucket_sizes: Sequence[int] | str | None,
 ):
     if bucket_sizes is None:
         return SemanticGraph(
@@ -364,7 +598,7 @@ def build_relation_graphs(
     max_degree: int | None = None,
     add_self_loops: bool = True,
     seed: int = 0,
-    bucket_sizes: Sequence[int] | None = None,
+    bucket_sizes: Sequence[int] | str | None = None,
 ) -> List[AnySemanticGraph]:
     """SGB for relation-based models (RGAT): one semantic graph per relation
     whose destination type carries labels *or* whose messages feed a labeled
@@ -396,7 +630,7 @@ def build_union_graph(
     max_degree: int | None = None,
     add_self_loops: bool = True,
     seed: int = 0,
-    bucket_sizes: Sequence[int] | None = None,
+    bucket_sizes: Sequence[int] | str | None = None,
 ) -> Dict[str, AnySemanticGraph]:
     """SGB for Simple-HGN: one union graph per destination type containing
     the in-edges of *all* relations, with per-slot relation ids so the
@@ -487,7 +721,7 @@ def build_metapath_graphs(
     max_degree: int | None = None,
     cap_fanout: int = 4096,
     seed: int = 0,
-    bucket_sizes: Sequence[int] | None = None,
+    bucket_sizes: Sequence[int] | str | None = None,
 ) -> List[AnySemanticGraph]:
     """SGB for metapath-based models (HAN).
 

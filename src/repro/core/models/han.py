@@ -3,6 +3,11 @@
 Node-level attention: one GAT per metapath graph (decomposed per Eq. 2);
 semantic-level attention fuses per-metapath embeddings. Paper settings:
 hidden 64, heads 8, 1 layer.
+
+Layout-agnostic: each ``run_aggregate_graph`` call is one NA dispatch per
+metapath graph whatever the SGB layout — flat, statically bucketed, or
+autotuned — with degree buckets handled inside that single dispatch
+(grouped ragged-grid kernel under ``fused_kernel``).
 """
 from __future__ import annotations
 

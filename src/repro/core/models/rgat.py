@@ -3,6 +3,11 @@
 One GAT per relation semantic graph per layer; per-type fusion is the mean
 over incoming relations plus the self projection. Paper settings: hidden 64,
 heads 8, 3 layers.
+
+Layout-agnostic: NA is one dispatch per relation graph per layer under any
+SGB layout (flat / bucketed / autotuned); degree buckets ride inside that
+dispatch (single ragged-grid kernel launch under ``fused_kernel``), so a
+3-layer RGAT issues 3·R NA dispatches, not 3·R·num_buckets.
 """
 from __future__ import annotations
 

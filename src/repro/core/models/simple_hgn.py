@@ -5,6 +5,11 @@ edge-type embeddings in the attention logits.
 term is per-edge-type, so the ADE decomposition still holds: the pruner ranks
 by (a_srcᵀh'_u + a_relᵀr'_ψ(e)), both target-independent. Paper settings:
 hidden 64, heads 8, 2 layers, residual connections.
+
+Layout-agnostic: one NA dispatch per destination type's union graph per
+layer under any SGB layout; the per-edge-type term threads through the
+bucketed single-dispatch path (and the grouped kernel) unchanged, since
+edge-type ids are re-tiled alongside neighbor ids.
 """
 from __future__ import annotations
 

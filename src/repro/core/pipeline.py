@@ -8,7 +8,7 @@ split for accuracy experiments.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -54,11 +54,15 @@ def prepare(
     scale: float = 0.1,
     max_degree: Optional[int] = 256,
     seed: int = 0,
-    bucket_sizes: Optional[Sequence[int]] = hetgraph.DEFAULT_BUCKET_SIZES,
+    bucket_sizes: Union[Sequence[int], str, None] = hetgraph.DEFAULT_BUCKET_SIZES,
 ) -> HGNNTask:
     """Assemble dataset → SGB → model. ``bucket_sizes`` selects the SGB
     layout: a capacity list yields the degree-bucketed build (the default),
-    ``None`` the flat (T, D_max) padded-CSC build."""
+    ``"auto"`` autotunes each semantic graph's capacities from its own
+    degree histogram (``hetgraph.autotune_bucket_sizes``), ``None`` the
+    flat (T, D_max) padded-CSC build. Bucketed layouts run NA as a single
+    dispatch per semantic graph (one ragged-grid kernel launch under
+    ``fused_kernel``); models are layout-agnostic."""
     g = synthetic.DATASETS[dataset](scale=scale, seed=seed)
     feats = {t: jnp.asarray(f) for t, f in g.features.items()}
     offsets = g.type_offsets()

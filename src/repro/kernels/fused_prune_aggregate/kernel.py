@@ -19,6 +19,26 @@ K2  ``gather-aggregate``: scalar-prefetch (PrefetchScalarGridSpec) kernel;
 
 The full (T, D, H·dh) gathered-feature tensor of the staged flow is never
 materialized anywhere.
+
+Two grid shapes share the K1/K2 bodies:
+
+  * **flat** (``fused_prune_aggregate_pallas``): one ``(T, D)`` padded-CSC
+    table, rectangular grid ``(T/T_TILE, D/D_TILE)``.
+  * **grouped ragged** (``fused_prune_aggregate_grouped_pallas``): every
+    degree bucket of a ``BucketedSemanticGraph`` in ONE launch. The 1-D
+    grid walks a ``GroupedBucketLayout``'s tile stack (bucket-major,
+    row-tile next, D-tile innermost); a scalar-prefetched metadata table
+    tells each step its output row block, its D-tile position (first →
+    reset scratch, last → softmax + flush), its bucket's effective K, and
+    whether the bucket takes the §4.3 pruner **bypass** branch
+    (capacity ≤ K: candidate tiles are copied straight into their
+    statically-known retention slots — no min-replace scan). Buckets with
+    different capacities share one scratch of width K_s = max effective K;
+    slots past a row's own K are parked at +inf (``POS``) so the
+    retention-domain argmin never selects them. Narrow buckets therefore
+    run fewer D-tile steps instead of padding to the global D_max, and the
+    whole semantic graph costs one ``pallas_call`` pair instead of one per
+    bucket.
 """
 from __future__ import annotations
 
@@ -29,10 +49,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import NEG, min_replace
+from repro.kernels.common import NEG, POS, min_replace
 
 T_TILE = 8
 D_TILE = 128
+# grouped ragged grid: D-tile width. Narrow so capacity-8/16/32 buckets pay
+# at most w-1 padded slots per row; the lane-dim payload of K1 is H anyway.
+W_TILE = 8
+
+# trace-time launch accounting: how many pallas_call sites were traced and
+# how often the grouped single-dispatch region retraced. After
+# jax.clear_caches() + one forward, "pallas_calls" equals the number of
+# kernel launches that forward dispatches — up to jit-cache sharing between
+# identically-shaped call sites, which traces once but launches per call
+# (count per-graph with a cleared cache when exactness matters).
+DISPATCH = {"pallas_calls": 0, "grouped_traces": 0}
 
 
 def _prune_kernel(
@@ -103,6 +134,22 @@ def _aggregate_kernel(ids_ref, alpha_ref, h_ref, out_ref):
     out_ref[...] += a[None, :, None] * row
 
 
+def _grouped_aggregate_kernel(meta_ref, ids_ref, alpha_ref, h_ref, out_ref):
+    # ragged 1-D grid: step s accumulates retention slot meta[1, s] of
+    # output row meta[0, s]. Rows of narrow buckets contribute only their
+    # own effective-K steps, not the shared scratch width K_s.
+    s = pl.program_id(0)
+    slot = meta_ref[1, s]
+
+    @pl.when(slot == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = alpha_ref[0, slot, :]  # (H,)
+    row = h_ref[...]  # (1, H, dh) — DMA'd via the ids/meta index_map
+    out_ref[...] += a[None, :, None] * row
+
+
 @functools.partial(jax.jit, static_argnames=("prune_k", "slope", "interpret"))
 def fused_prune_aggregate_pallas(
     theta_g: jax.Array,  # (T, D, H)
@@ -124,6 +171,7 @@ def fused_prune_aggregate_pallas(
     gid = jnp.pad(nbr_idx.astype(jnp.int32), ((0, tp), (0, dp)))
     tt, dd = mask.shape
 
+    DISPATCH["pallas_calls"] += 1
     alpha, ids = pl.pallas_call(
         functools.partial(_prune_kernel, slope=slope),
         grid=(tt // T_TILE, dd // D_TILE),
@@ -150,6 +198,7 @@ def fused_prune_aggregate_pallas(
     )(theta_g, mask, theta_dst, gid)
 
     ids_safe = jnp.maximum(ids, 0)  # α is 0 on empty slots
+    DISPATCH["pallas_calls"] += 1
     out = pl.pallas_call(
         _aggregate_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -165,3 +214,170 @@ def fused_prune_aggregate_pallas(
         interpret=interpret,
     )(ids_safe, alpha, h_proj.astype(jnp.float32))
     return out[:t]
+
+
+def _grouped_prune_kernel(
+    meta_ref,  # (5, G) SMEM: row_block, dt, n_dt, bypass, k_eff per step
+    theta_g_ref,  # (1, Tt, W, H) θ_u* (+rel) tile, grid-ordered
+    mask_ref,  # (1, Tt, W) int32
+    gid_ref,  # (1, Tt, W) int32 global source ids
+    theta_dst_ref,  # (1, Tt, H) — θ_*v rows of this step's row block
+    alpha_ref,  # out (1, Tt, K_s, H)
+    ids_ref,  # out (1, Tt, K_s) retained global ids (-1 = empty)
+    rd_rank,  # scratch (Tt, K_s) f32
+    rd_theta,  # scratch (Tt, K_s, H) f32
+    rd_id,  # scratch (Tt, K_s) i32
+    *,
+    slope: float,
+    w: int,
+):
+    g = pl.program_id(0)
+    dt = meta_ref[1, g]
+    n_dt = meta_ref[2, g]
+    bypass = meta_ref[3, g]
+    k_eff = meta_ref[4, g]
+    slot = jax.lax.broadcasted_iota(jnp.int32, rd_rank.shape, 1)
+
+    @pl.when(dt == 0)
+    def _init():
+        # slots past this bucket's effective K park at +inf: never the
+        # argmin, never replaced — one scratch width serves every bucket
+        rd_rank[...] = jnp.where(slot < k_eff, NEG, POS)
+        rd_theta[...] = jnp.zeros_like(rd_theta)
+        rd_id[...] = jnp.full_like(rd_id, -1)
+
+    theta = theta_g_ref[0]  # (Tt, W, H)
+    valid = mask_ref[0] != 0
+    rank = jnp.where(valid, theta.sum(-1), NEG)  # (Tt, W)
+    gids = jnp.where(valid, gid_ref[0], -1)
+
+    # static guard: a bypass bucket's k_eff is its padded capacity (≥ w), so
+    # K_s < w proves no step sets the flag — and the w-wide slice below
+    # would not fit the scratch (pl.when still traces untaken branches)
+    if rd_rank.shape[-1] >= w:
+
+        @pl.when(bypass != 0)
+        def _direct():
+            # §4.3 pruner bypass, in-kernel: capacity ≤ K means every
+            # candidate is retained, so its slot is known statically from
+            # the tile column — a straight copy, no O(W) min-replace scan
+            col = dt * w
+            rd_rank[:, pl.ds(col, w)] = rank
+            rd_id[:, pl.ds(col, w)] = gids
+            rd_theta[:, pl.ds(col, w), :] = theta
+
+    @pl.when(bypass == 0)
+    def _insert():
+        def step(j, _):
+            cur = jax.lax.dynamic_slice_in_dim(rank, j, 1, axis=1)[:, 0]
+            cur_th = jax.lax.dynamic_slice_in_dim(theta, j, 1, axis=1)[:, 0, :]
+            cur_id = jax.lax.dynamic_slice_in_dim(gids, j, 1, axis=1)[:, 0]
+            new_rank, (new_id, new_th) = min_replace(
+                rd_rank[...],
+                [(rd_id[...], cur_id), (rd_theta[...], cur_th)],
+                cur,
+                None,
+            )
+            rd_rank[...] = new_rank
+            rd_id[...] = new_id
+            rd_theta[...] = new_th
+            return 0
+
+        jax.lax.fori_loop(0, w, step, 0)
+
+    @pl.when(dt == n_dt - 1)
+    def _flush():
+        ok = (rd_rank[...] > NEG / 2) & (slot < k_eff)  # (Tt, K_s)
+        th = rd_theta[...] + theta_dst_ref[0][:, None, :]
+        th = jnp.where(th >= 0, th, slope * th)  # LeakyReLU
+        th = jnp.where(ok[..., None], th, NEG)
+        mx = jnp.max(th, axis=1, keepdims=True)
+        ex = jnp.exp(th - mx)
+        ex = jnp.where(ok[..., None], ex, 0.0)
+        alpha_ref[0] = ex / (ex.sum(axis=1, keepdims=True) + 1e-30)
+        ids_ref[0] = jnp.where(ok, rd_id[...], -1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_s", "t_tile", "w", "slope", "interpret")
+)
+def fused_prune_aggregate_grouped_pallas(
+    theta_g: jax.Array,  # (G, t_tile, w, H) grid-ordered θ_u* (+rel) tiles
+    mask: jax.Array,  # (G, t_tile, w)
+    gid: jax.Array,  # (G, t_tile, w) global source ids
+    theta_dst_rows: jax.Array,  # (R, t_tile, H) θ_*v per grouped row
+    meta: jax.Array,  # (5, G) int32 per-step K1 metadata (see kernel)
+    agg_meta: jax.Array,  # (2, S) int32 per-step K2 (row, slot) metadata
+    h_proj: jax.Array,  # (N, H, dh)
+    perm: jax.Array,  # (T,) grouped row of each target
+    k_s: int,
+    t_tile: int = T_TILE,
+    w: int = W_TILE,
+    slope: float = 0.2,
+    interpret: bool = True,
+) -> jax.Array:
+    """Single-launch NA over all buckets of a grouped layout.
+
+    One K1 launch walks every bucket's tiles (ragged 1-D grid, scalar-
+    prefetched metadata); one K2 launch gathers the retained feature rows
+    (ragged too — each row contributes its own bucket's effective K steps,
+    so the shared scratch width K_s never inflates the gather); the final
+    gather by ``perm`` restores target order. Returns ``(T, H, dh)``
+    float32.
+    """
+    grid_steps, _, _, h = theta_g.shape
+    r = theta_dst_rows.shape[0]
+    n, _, dh = h_proj.shape
+    rows = r * t_tile
+
+    DISPATCH["pallas_calls"] += 1
+    alpha, ids = pl.pallas_call(
+        functools.partial(_grouped_prune_kernel, slope=slope, w=w),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(grid_steps,),
+            in_specs=[
+                pl.BlockSpec((1, t_tile, w, h), lambda g, m: (g, 0, 0, 0)),
+                pl.BlockSpec((1, t_tile, w), lambda g, m: (g, 0, 0)),
+                pl.BlockSpec((1, t_tile, w), lambda g, m: (g, 0, 0)),
+                pl.BlockSpec((1, t_tile, h), lambda g, m: (m[0, g], 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, t_tile, k_s, h), lambda g, m: (m[0, g], 0, 0, 0)),
+                pl.BlockSpec((1, t_tile, k_s), lambda g, m: (m[0, g], 0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((t_tile, k_s), jnp.float32),
+                pltpu.VMEM((t_tile, k_s, h), jnp.float32),
+                pltpu.VMEM((t_tile, k_s), jnp.int32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((r, t_tile, k_s, h), jnp.float32),
+            jax.ShapeDtypeStruct((r, t_tile, k_s), jnp.int32),
+        ],
+        interpret=interpret,
+    )(meta, theta_g.astype(jnp.float32), mask.astype(jnp.int32),
+      gid.astype(jnp.int32), theta_dst_rows.astype(jnp.float32))
+
+    alpha = alpha.reshape(rows, k_s, h)
+    ids = ids.reshape(rows, k_s)
+    ids_safe = jnp.maximum(ids, 0)  # α is 0 on empty slots
+    DISPATCH["pallas_calls"] += 1
+    out = pl.pallas_call(
+        _grouped_aggregate_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(agg_meta.shape[1],),
+            in_specs=[
+                pl.BlockSpec((1, k_s, h), lambda s, m, ids: (m[0, s], 0, 0)),
+                pl.BlockSpec(
+                    (1, h, dh), lambda s, m, ids: (ids[m[0, s], m[1, s]], 0, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, h, dh), lambda s, m, ids: (m[0, s], 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, h, dh), jnp.float32),
+        interpret=interpret,
+    )(agg_meta, ids_safe, alpha, h_proj.astype(jnp.float32))
+    return out[perm]

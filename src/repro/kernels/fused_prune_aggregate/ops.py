@@ -1,12 +1,28 @@
-"""Public wrapper used by ``repro.core.attention.aggregate_fused``."""
+"""Public wrappers used by ``repro.core.flows`` / ``repro.core.attention``.
+
+``fused_prune_aggregate`` runs the flat (T, D) kernel pair;
+``fused_prune_aggregate_grouped`` runs every degree bucket of a
+``BucketedSemanticGraph`` in ONE kernel pair over the ragged grouped grid
+(see ``kernel.py``). Device mirrors of a graph's static tile stack and the
+per-``prune_k`` metadata table are cached on its ``GroupedBucketLayout`` so
+repeated layers/steps ship no host arrays.
+"""
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.fused_prune_aggregate.kernel import fused_prune_aggregate_pallas
+from repro.kernels.fused_prune_aggregate.kernel import (
+    DISPATCH,
+    T_TILE,
+    W_TILE,
+    fused_prune_aggregate_grouped_pallas,
+    fused_prune_aggregate_pallas,
+)
 
 
 def fused_prune_aggregate(
@@ -30,4 +46,130 @@ def fused_prune_aggregate(
     return fused_prune_aggregate_pallas(
         theta_g, nbr_mask, theta_dst, nbr_idx, h_proj,
         prune_k=k, slope=slope, interpret=interpret,
+    )
+
+
+def grouped_meta(layout, prune_k: Optional[int]):
+    """Per-grid-step metadata + scratch width for a grouped launch.
+
+    ``k_eff`` per bucket is ``prune_k`` when the bucket is pruned and the
+    w-aligned capacity when it takes the §4.3 bypass (capacity ≤ prune_k,
+    or no pruning at all) — the bypass branch copies candidates into
+    statically-known slots, so it needs the full padded width. The shared
+    scratch width ``k_s`` is the max effective K across buckets that
+    actually contribute grid steps (empty buckets don't widen anything).
+
+    Returns ``(k1_meta, k2_meta, k_s)``: K1 rows are (row_block, dt, n_dt,
+    bypass, k_eff) per prune step; K2 rows are (grouped_row, slot) per
+    gather step — each grouped row contributes exactly its own bucket's
+    k_eff steps, so the ragged gather never pays the shared width.
+    """
+    caps = layout.caps.astype(np.int64)
+    caps_pad = layout.caps_pad.astype(np.int64)
+    if prune_k is None:
+        bypass = np.ones_like(caps)
+        k_eff = caps_pad
+    else:
+        bypass = (caps <= prune_k).astype(np.int64)
+        k_eff = np.where(bypass, caps_pad, np.minimum(prune_k, caps_pad))
+    present = np.unique(layout.step_bucket)
+    k_s = int(k_eff[present].max()) if len(present) else 1
+    meta = np.stack(
+        [
+            layout.step_row,
+            layout.step_dt,
+            layout.step_ndt,
+            bypass[layout.step_bucket],
+            k_eff[layout.step_bucket],
+        ]
+    ).astype(np.int32)
+    # per grouped row: its bucket's k_eff (row blocks appear in step_row
+    # with their owning bucket; padded rows share the bucket's k_eff and
+    # accumulate zeros)
+    n_blocks = layout.num_rows // layout.t_tile
+    block_bucket = np.zeros(n_blocks, np.int64)
+    block_bucket[layout.step_row] = layout.step_bucket
+    k_row = np.repeat(k_eff[block_bucket], layout.t_tile)
+    starts = np.concatenate([[0], np.cumsum(k_row)[:-1]])
+    slots = np.arange(int(k_row.sum())) - np.repeat(starts, k_row)
+    agg_meta = np.stack(
+        [np.repeat(np.arange(layout.num_rows), k_row), slots]
+    ).astype(np.int32)
+    return meta, agg_meta, k_s
+
+
+def _layout_device(layout, prune_k: Optional[int]):
+    """jnp mirrors of the layout's static arrays, cached on the layout."""
+    cache = getattr(layout, "_dev", None)
+    # eager conversion even when first reached inside an outer jit trace —
+    # cached tracers would leak out of that trace
+    with jax.ensure_compile_time_eval():
+        if cache is None:
+            cache = {
+                "base": (
+                    jnp.asarray(layout.nbr),
+                    jnp.asarray(layout.msk.astype(np.int32)),
+                    jnp.asarray(layout.ety),
+                    jnp.asarray(layout.row_targets),
+                    jnp.asarray(layout.perm),
+                )
+            }
+            layout._dev = cache
+        if prune_k not in cache:
+            meta, agg_meta, k_s = grouped_meta(layout, prune_k)
+            cache[prune_k] = (jnp.asarray(meta), jnp.asarray(agg_meta), k_s)
+    return cache["base"], cache[prune_k]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_s", "t_tile", "w", "slope", "interpret", "use_rel"),
+)
+def _grouped_call(
+    h_proj, theta_src, theta_dst, theta_rel,
+    nbr, msk, ety, row_targets, meta, agg_meta, perm,
+    k_s, t_tile, w, slope, interpret, use_rel,
+):
+    DISPATCH["grouped_traces"] += 1
+    theta_g = theta_src[nbr]  # (G, t_tile, w, H)
+    if use_rel:
+        theta_g = theta_g + theta_rel[ety]
+    h = theta_dst.shape[-1]
+    td_rows = theta_dst[row_targets].reshape(-1, t_tile, h)
+    return fused_prune_aggregate_grouped_pallas(
+        theta_g, msk, nbr, td_rows, meta, agg_meta, h_proj, perm,
+        k_s=k_s, t_tile=t_tile, w=w, slope=slope, interpret=interpret,
+    )
+
+
+def fused_prune_aggregate_grouped(
+    h_proj: jax.Array,  # (N, H, dh)
+    theta_src: jax.Array,  # (N, H)
+    theta_dst: jax.Array,  # (T, H) — full target range of the graph
+    sg,  # BucketedSemanticGraph
+    theta_rel: Optional[jax.Array] = None,  # (R, H)
+    prune_k: Optional[int] = None,
+    slope: float = 0.2,
+    interpret: bool = True,
+    t_tile: int = T_TILE,
+    w: int = W_TILE,
+) -> jax.Array:
+    """NA over ALL buckets of ``sg`` as one kernel-pair launch.
+
+    Returns ``(sg.num_targets, H, dh)`` float32 in target order.
+    """
+    layout = sg.grouped(t_tile, w)
+    n, h, dh = h_proj.shape
+    if layout.num_steps == 0:
+        return jnp.zeros((sg.num_targets, h, dh), h_proj.dtype)
+    (nbr, msk, ety, row_targets, perm), (meta, agg_meta, k_s) = _layout_device(
+        layout, prune_k
+    )
+    use_rel = theta_rel is not None
+    return _grouped_call(
+        h_proj, theta_src, theta_dst,
+        theta_rel if use_rel else None,
+        nbr, msk, ety, row_targets, meta, agg_meta, perm,
+        k_s=k_s, t_tile=t_tile, w=w, slope=slope, interpret=interpret,
+        use_rel=use_rel,
     )

@@ -1,5 +1,11 @@
-"""Pure-jnp oracle for the fused prune+aggregate kernel (= staged pruned
-flow with Algorithm-1 tie semantics)."""
+"""Pure-jnp oracles for the fused prune+aggregate kernels.
+
+``fused_prune_aggregate_ref`` — the flat kernel's oracle (= staged pruned
+flow with Algorithm-1 tie semantics). ``fused_prune_aggregate_grouped_ref``
+— the grouped ragged-grid kernel's oracle: the flat oracle per bucket (with
+the §4.3 bypass = keep-everything for capacity ≤ K), concatenated and
+restored to target order by the graph's precomputed inverse permutation.
+"""
 from __future__ import annotations
 
 import jax
@@ -25,3 +31,32 @@ def fused_prune_aggregate_ref(
     alpha = ex / (ex.sum(axis=1, keepdims=True) + 1e-30)
     feats = h_proj[nbr_idx]  # (T, D, H, dh)
     return jnp.einsum("tdh,tdhf->thf", alpha, feats)
+
+
+def fused_prune_aggregate_grouped_ref(
+    h_proj, theta_src, theta_dst, sg, theta_rel=None, prune_k=None, slope=0.2
+):
+    """Per-bucket oracle for the single-launch grouped kernel.
+
+    ``sg`` is a ``BucketedSemanticGraph``; returns (num_targets, H, dh) in
+    target order.
+    """
+    n, h, dh = h_proj.shape
+    outs = []
+    for b in sg.buckets:
+        if b.num_targets == 0:
+            continue
+        nbr = jnp.asarray(b.nbr_idx)
+        theta_g = theta_src[nbr]
+        if theta_rel is not None:
+            theta_g = theta_g + theta_rel[jnp.asarray(b.edge_type)]
+        k = b.capacity if prune_k is None else min(prune_k, b.capacity)
+        outs.append(
+            fused_prune_aggregate_ref(
+                theta_g, jnp.asarray(b.nbr_mask),
+                theta_dst[jnp.asarray(b.targets)], nbr, h_proj, k, slope
+            )
+        )
+    if not outs:
+        return jnp.zeros((sg.num_targets, h, dh), jnp.float32)
+    return jnp.concatenate(outs, axis=0)[jnp.asarray(sg.target_perm())]

@@ -136,6 +136,160 @@ def test_fused_prune_aggregate_with_rel_term(rng):
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=2e-5)
 
 
+# --------------------------------------------------------------------------
+# grouped ragged-grid kernel: single-launch NA over all degree buckets
+# --------------------------------------------------------------------------
+
+
+def _random_bucketed(rng, t, d, n, caps, num_etypes=1, edges=600):
+    from repro.core import hetgraph
+
+    src = rng.integers(0, n, size=edges).astype(np.int64)
+    # heavy-tailed destination draw so every degree bucket gets targets
+    dst = np.minimum((t * rng.random(edges) ** 3).astype(np.int64), t - 1)
+    ety = rng.integers(0, num_etypes, size=edges).astype(np.int64)
+    nbr, msk, et = hetgraph._pad_csc(
+        src, dst, t, d, np.random.default_rng(7), ety
+    )
+    return hetgraph.bucketize(
+        "g", ("x",), "x", nbr, msk, et, caps, num_edge_types=num_etypes
+    )
+
+
+@pytest.mark.parametrize(
+    "caps,k",
+    [
+        # multi-bucket, pruned + bypass mix
+        ((4, 8, 16), 6),
+        # tile-unaligned capacities (not multiples of the kernel's W=8)
+        ((5, 13), 7),
+        # bucket count of 1 (single capacity covers everything)
+        ((64,), 6),
+        # all-bypass: every capacity ≤ K, the kernel's direct-copy branch
+        ((4, 8), 100),
+        # no pruning at all (k=None → unpruned NA through the grouped grid)
+        ((4, 8, 16), None),
+    ],
+)
+def test_grouped_matches_ref_and_per_bucket_path(caps, k, rng):
+    """Golden parity: the single-launch grouped kernel vs (a) the per-bucket
+    oracle and (b) the legacy per-bucket dispatch path."""
+    from repro.core import attention
+    from repro.core.flows import FlowConfig, run_aggregate_graph
+    from repro.kernels.fused_prune_aggregate.ops import (
+        fused_prune_aggregate_grouped,
+    )
+    from repro.kernels.fused_prune_aggregate.ref import (
+        fused_prune_aggregate_grouped_ref,
+    )
+
+    t, d, n, h, dh = 30, 40, 50, 4, 8
+    sg = _random_bucketed(rng, t, d, n, caps)
+    hp = jnp.asarray(rng.normal(size=(n, h, dh)), jnp.float32)
+    ts = jnp.asarray(rng.normal(size=(n, h)), jnp.float32)
+    td = jnp.asarray(rng.normal(size=(t, h)), jnp.float32)
+    out_k = fused_prune_aggregate_grouped(hp, ts, td, sg, prune_k=k)
+    out_r = fused_prune_aggregate_grouped_ref(hp, ts, td, sg, prune_k=k)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=2e-5)
+    scores = attention.DecomposedScores(ts, td)
+    out_loop = run_aggregate_graph(
+        FlowConfig("fused_kernel", prune_k=k, bucket_dispatch="loop"),
+        hp, scores, sg,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_k), np.asarray(out_loop), atol=2e-5
+    )
+
+
+def test_grouped_with_rel_term(rng):
+    """Simple-HGN path through the grouped grid: the per-edge-type term
+    enters the ranking scalar of every bucket."""
+    from repro.kernels.fused_prune_aggregate.ops import (
+        fused_prune_aggregate_grouped,
+    )
+    from repro.kernels.fused_prune_aggregate.ref import (
+        fused_prune_aggregate_grouped_ref,
+    )
+
+    t, d, n, h, dh, r = 24, 32, 40, 4, 8, 5
+    sg = _random_bucketed(rng, t, d, n, (4, 12), num_etypes=r)
+    hp = jnp.asarray(rng.normal(size=(n, h, dh)), jnp.float32)
+    ts = jnp.asarray(rng.normal(size=(n, h)), jnp.float32)
+    td = jnp.asarray(rng.normal(size=(t, h)), jnp.float32)
+    tr = jnp.asarray(rng.normal(size=(r, h)), jnp.float32)
+    out_k = fused_prune_aggregate_grouped(
+        hp, ts, td, sg, theta_rel=tr, prune_k=6
+    )
+    out_r = fused_prune_aggregate_grouped_ref(
+        hp, ts, td, sg, theta_rel=tr, prune_k=6
+    )
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=2e-5)
+
+
+def test_grouped_empty_bucket_and_empty_graph(rng):
+    """A hand-built graph with an empty bucket in the tuple, and a graph
+    with zero edges: both must survive the grouped launch."""
+    from repro.core import hetgraph
+    from repro.kernels.fused_prune_aggregate.ops import (
+        fused_prune_aggregate_grouped,
+    )
+    from repro.kernels.fused_prune_aggregate.ref import (
+        fused_prune_aggregate_grouped_ref,
+    )
+
+    n, h, dh = 30, 4, 8
+    hp = jnp.asarray(rng.normal(size=(n, h, dh)), jnp.float32)
+    ts = jnp.asarray(rng.normal(size=(n, h)), jnp.float32)
+
+    sg = _random_bucketed(rng, 12, 16, n, (4, 8), edges=120)
+    empty = hetgraph.DegreeBucket(
+        targets=np.zeros(0, np.int32),
+        nbr_idx=np.zeros((0, 6), np.int32),
+        nbr_mask=np.zeros((0, 6), bool),
+        edge_type=np.zeros((0, 6), np.int32),
+    )
+    sg_e = hetgraph.BucketedSemanticGraph(
+        "e", ("x",), "x", sg.num_targets, (empty,) + sg.buckets
+    )
+    td = jnp.asarray(rng.normal(size=(sg.num_targets, h)), jnp.float32)
+    out = fused_prune_aggregate_grouped(hp, ts, td, sg_e, prune_k=5)
+    ref = fused_prune_aggregate_grouped_ref(hp, ts, td, sg_e, prune_k=5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    # zero-edge graph: every target degree 0 → all-zero output
+    z_nbr = np.zeros((5, 1), np.int32)
+    z_msk = np.zeros((5, 1), bool)
+    sg_z = hetgraph.bucketize(
+        "z", ("x",), "x", z_nbr, z_msk, np.zeros((5, 1), np.int32), (2,)
+    )
+    td5 = jnp.asarray(rng.normal(size=(5, h)), jnp.float32)
+    out_z = fused_prune_aggregate_grouped(hp, ts, td5, sg_z, prune_k=3)
+    assert out_z.shape == (5, h, dh)
+    np.testing.assert_allclose(np.asarray(out_z), 0.0, atol=0)
+
+
+def test_grouped_is_one_pallas_pair(rng):
+    """The tentpole invariant: however many buckets, one launch traces
+    exactly one pallas_call pair."""
+    from repro.kernels.fused_prune_aggregate import kernel as fpa_kernel
+    from repro.kernels.fused_prune_aggregate.ops import (
+        fused_prune_aggregate_grouped,
+    )
+
+    t, d, n, h, dh = 40, 48, 60, 4, 8
+    sg = _random_bucketed(rng, t, d, n, (4, 8, 16, 32), edges=900)
+    assert len(sg.buckets) >= 4
+    hp = jnp.asarray(rng.normal(size=(n, h, dh)), jnp.float32)
+    ts = jnp.asarray(rng.normal(size=(n, h)), jnp.float32)
+    td = jnp.asarray(rng.normal(size=(t, h)), jnp.float32)
+    import jax
+
+    jax.clear_caches()
+    before = fpa_kernel.DISPATCH["pallas_calls"]
+    jax.block_until_ready(fused_prune_aggregate_grouped(hp, ts, td, sg, prune_k=6))
+    assert fpa_kernel.DISPATCH["pallas_calls"] - before == 2
+
+
 @pytest.mark.parametrize(
     "b,h,hkv,dh,s,k",
     [(2, 8, 2, 16, 200, 12), (3, 4, 4, 8, 128, 5), (1, 16, 4, 32, 300, 50)],

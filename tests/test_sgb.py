@@ -198,8 +198,117 @@ def test_bucketed_build_is_pure_relayout(dataset):
 
 
 # --------------------------------------------------------------------------
-# logits parity: flat vs bucketed × staged vs fused vs fused_kernel,
-# all three models × two synthetic datasets
+# bucket-capacity autotuner
+# --------------------------------------------------------------------------
+
+def test_autotune_never_worse_than_static():
+    """DP over observed degrees beats (or ties) any static capacity list of
+    the same bucket budget — asserted against {8, 32, 128, D_max} on every
+    semantic graph of every builder."""
+    g = synthetic.DATASETS["imdb"](scale=0.1, seed=0)
+    mps = synthetic.METAPATHS["imdb"]
+    for builder, args in [
+        (hetgraph.build_metapath_graphs, (g, mps)),
+        (hetgraph.build_relation_graphs, (g,)),
+        (hetgraph.build_union_graph, (g,)),
+    ]:
+        static = builder(*args, max_degree=256, seed=0,
+                         bucket_sizes=hetgraph.DEFAULT_BUCKET_SIZES)
+        auto = builder(*args, max_degree=256, seed=0, bucket_sizes="auto")
+        if isinstance(static, dict):
+            static, auto = list(static.values()), list(auto.values())
+        for ss, sa in zip(static, auto):
+            assert sa.padded_slots() <= ss.padded_slots(), sa.name
+            assert len(sa.buckets) <= 4
+            # still a pure relayout: same edges, same degrees
+            assert sa.num_edges == ss.num_edges
+            np.testing.assert_array_equal(sa.degrees(), ss.degrees())
+
+
+def test_autotune_degenerate_histograms():
+    # uniform degrees: one bucket at exactly that degree
+    assert hetgraph.autotune_bucket_sizes(np.full(100, 7)) == (7,)
+    # few distinct degrees: one bucket each (zero padded slots)
+    caps = hetgraph.autotune_bucket_sizes(np.array([1, 5, 5, 9]), max_buckets=4)
+    assert caps == (1, 5, 9)
+    # degree-0 targets still need a slot
+    assert hetgraph.autotune_bucket_sizes(np.zeros(10)) == (1,)
+    # budget binds: never more than max_buckets capacities
+    deg = np.arange(1, 200)
+    caps = hetgraph.autotune_bucket_sizes(deg, max_buckets=4)
+    assert len(caps) <= 4 and caps[-1] == 199
+    # a huge launch cost collapses everything into one bucket
+    caps = hetgraph.autotune_bucket_sizes(deg, max_buckets=4, launch_cost=1e12)
+    assert caps == (199,)
+
+
+def test_autotune_rounding_objective():
+    """round_to makes the DP cost count tile padding: capacities land on
+    values whose padded width is no worse than the unrounded optimum's."""
+    deg = np.array([3] * 50 + [9] * 50)
+    # unrounded: buckets at 3 and 9 (slots 150 + 450)
+    assert hetgraph.autotune_bucket_sizes(deg, max_buckets=2) == (3, 9)
+    # rounded to 8: both pad to ≤ 16; merging (one cap-9 bucket, pad 16)
+    # costs 100×16 = 1600 vs split 50×8 + 50×16 = 1200 → keep the split
+    caps = hetgraph.autotune_bucket_sizes(deg, max_buckets=2, round_to=8)
+    assert caps == (3, 9)
+
+
+# --------------------------------------------------------------------------
+# grouped ragged-grid layout: pure relayout of the bucket tables
+# --------------------------------------------------------------------------
+
+def test_grouped_layout_roundtrip():
+    g = synthetic.DATASETS["acm"](scale=0.05, seed=0)
+    sgs = hetgraph.build_relation_graphs(
+        g, max_degree=48, seed=0, bucket_sizes=(4, 8, 16)
+    )
+    for sg in sgs:
+        lay = sg.grouped()
+        # perm inverts the padded grouped rows back to target order
+        assert len(np.unique(lay.perm)) == sg.num_targets
+        gi = 0
+        row_off = 0
+        for bi, b in enumerate(sg.buckets):
+            t_b, d_b = b.nbr_idx.shape
+            rows_p = -(-t_b // lay.t_tile) * lay.t_tile
+            cap_p = int(lay.caps_pad[bi])
+            n_rt, n_dt = rows_p // lay.t_tile, cap_p // lay.w
+            for tiles, table in ((lay.nbr, b.nbr_idx), (lay.msk, b.nbr_mask)):
+                rec = (
+                    tiles[gi: gi + n_rt * n_dt]
+                    .reshape(n_rt, n_dt, lay.t_tile, lay.w)
+                    .transpose(0, 2, 1, 3)
+                    .reshape(rows_p, cap_p)
+                )
+                np.testing.assert_array_equal(rec[:t_b, :d_b], table)
+            # padding rows/cols carry no valid slots
+            rec_m = (
+                lay.msk[gi: gi + n_rt * n_dt]
+                .reshape(n_rt, n_dt, lay.t_tile, lay.w)
+                .transpose(0, 2, 1, 3)
+                .reshape(rows_p, cap_p)
+            )
+            assert not rec_m[t_b:].any() and not rec_m[:, d_b:].any()
+            np.testing.assert_array_equal(
+                lay.perm[b.targets], row_off + np.arange(t_b)
+            )
+            np.testing.assert_array_equal(
+                lay.row_targets[row_off: row_off + t_b], b.targets
+            )
+            gi += n_rt * n_dt
+            row_off += rows_p
+        assert gi == lay.num_steps and row_off == lay.num_rows
+        # grid-step metadata is self-consistent
+        assert (lay.step_dt < lay.step_ndt).all()
+        np.testing.assert_array_equal(
+            lay.step_ndt, (lay.caps_pad // lay.w)[lay.step_bucket]
+        )
+
+
+# --------------------------------------------------------------------------
+# logits parity: {flat, bucketed, autotuned} × all flows × single vs loop
+# dispatch, all three models × two synthetic datasets
 # --------------------------------------------------------------------------
 
 MODELS = ["han", "rgat", "simple_hgn"]
@@ -216,6 +325,8 @@ def paired_tasks():
                                  bucket_sizes=None),
                 pipeline.prepare(m, d, scale=0.03, max_degree=32, seed=0,
                                  bucket_sizes=(4, 8, 16)),
+                pipeline.prepare(m, d, scale=0.03, max_degree=32, seed=0,
+                                 bucket_sizes="auto"),
             )
     return out
 
@@ -223,26 +334,50 @@ def paired_tasks():
 @pytest.mark.parametrize("model", MODELS)
 @pytest.mark.parametrize("dataset", DATASETS)
 def test_bucketed_matches_flat_staged(paired_tasks, model, dataset):
-    flat, buck = paired_tasks[(model, dataset)]
+    flat, buck, auto = paired_tasks[(model, dataset)]
     a = np.asarray(flat.logits(flat.params, FlowConfig("staged")))
     b = np.asarray(buck.logits(buck.params, FlowConfig("staged")))
+    c = np.asarray(auto.logits(auto.params, FlowConfig("staged")))
     np.testing.assert_allclose(a, b, atol=1e-5)
+    np.testing.assert_allclose(a, c, atol=1e-5)
 
 
+@pytest.mark.parametrize("layout", ["bucketed", "autotuned"])
 @pytest.mark.parametrize("model", MODELS)
 @pytest.mark.parametrize("dataset", DATASETS)
-def test_bucketed_flows_agree(paired_tasks, model, dataset):
-    """staged_pruned vs fused vs fused_kernel on the bucketed layout, and
-    each against the flat staged_pruned baseline."""
-    flat, buck = paired_tasks[(model, dataset)]
+def test_bucketed_flows_agree(paired_tasks, model, dataset, layout):
+    """staged_pruned vs fused vs fused_kernel on the bucketed/autotuned
+    layouts, each against the flat staged_pruned baseline — the fused_kernel
+    rows exercise the single-launch grouped ragged-grid kernel."""
+    flat, buck, auto = paired_tasks[(model, dataset)]
+    task = buck if layout == "bucketed" else auto
     k = 6
     base = np.asarray(flat.logits(flat.params, FlowConfig("staged_pruned", prune_k=k)))
-    staged_b = np.asarray(buck.logits(buck.params, FlowConfig("staged_pruned", prune_k=k)))
-    fused_b = np.asarray(buck.logits(buck.params, FlowConfig("fused", prune_k=k)))
-    kernel_b = np.asarray(buck.logits(buck.params, FlowConfig("fused_kernel", prune_k=k)))
+    staged_b = np.asarray(task.logits(task.params, FlowConfig("staged_pruned", prune_k=k)))
+    fused_b = np.asarray(task.logits(task.params, FlowConfig("fused", prune_k=k)))
+    kernel_b = np.asarray(task.logits(task.params, FlowConfig("fused_kernel", prune_k=k)))
     np.testing.assert_allclose(base, staged_b, atol=1e-5)
     np.testing.assert_allclose(base, fused_b, atol=1e-5)
     np.testing.assert_allclose(base, kernel_b, atol=1e-5)
+
+
+@pytest.mark.parametrize("flow", ["staged", "fused", "fused_kernel"])
+@pytest.mark.parametrize("model", MODELS)
+def test_single_dispatch_matches_bucket_loop(paired_tasks, model, flow):
+    """The single-dispatch bucketed NA (one jit region / one grouped kernel
+    launch + inverse-permutation gather) reproduces the legacy per-bucket
+    loop (slice_targets + out.at[targets].set per bucket) bit-close."""
+    _, buck, _ = paired_tasks[(model, "imdb")]
+    k = 6
+    single = np.asarray(
+        buck.logits(buck.params, FlowConfig(flow, prune_k=k))
+    )
+    loop = np.asarray(
+        buck.logits(
+            buck.params, FlowConfig(flow, prune_k=k, bucket_dispatch="loop")
+        )
+    )
+    np.testing.assert_allclose(single, loop, atol=1e-5)
 
 
 def test_bucket_bypass_routing():
