@@ -1,0 +1,76 @@
+"""CI guard: a benchmark smoke step must actually emit its rows.
+
+``benchmarks.common.emit`` persists every row to ``BENCH_<script>.json``;
+a smoke run that silently short-circuits (import error swallowed by a
+wrapper, an early ``return``, a filter that matches nothing) would leave
+the committed trajectory stale while the step still exits 0. This script
+fails the step unless the named BENCH file exists and holds enough rows
+matching the required prefix that were written by the CURRENT run: with
+``--newer-than`` only rows whose per-row ``ts`` stamp (written by
+``benchmarks.common.emit``) postdates a marker file the workflow touches
+before the smoke step are counted — rows merged forward from the committed
+trajectory keep their old stamp, so a smoke that re-emits only a subset of
+its rows fails even though the file itself was rewritten.
+
+Usage:
+    python benchmarks/check_emitted.py BENCH_na_sharded.json na_sharded_ \
+        --min-rows 4 [--newer-than .bench_stamp]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="BENCH_*.json file the smoke step must write")
+    ap.add_argument("prefix", help="required row-name prefix")
+    ap.add_argument("--min-rows", type=int, default=1)
+    ap.add_argument(
+        "--newer-than", default=None,
+        help="marker file touched before the smoke step; the BENCH file "
+        "must have been modified after it",
+    )
+    args = ap.parse_args()
+
+    if not os.path.exists(args.path):
+        print(f"FAIL: {args.path} does not exist — the benchmark emitted "
+              f"no rows", file=sys.stderr)
+        return 1
+    try:
+        rows = json.loads(open(args.path).read())
+    except json.JSONDecodeError as e:
+        print(f"FAIL: {args.path} is not valid JSON: {e}", file=sys.stderr)
+        return 1
+    hits = [
+        r for r in rows
+        if r.get("name", "").startswith(args.prefix) and "us_per_call" in r
+    ]
+    fresh = hits
+    if args.newer_than is not None:
+        if not os.path.exists(args.newer_than):
+            print(f"FAIL: marker {args.newer_than} missing", file=sys.stderr)
+            return 1
+        cutoff = os.path.getmtime(args.newer_than)
+        fresh = [r for r in hits if r.get("ts", 0) >= cutoff]
+    if len(fresh) < args.min_rows:
+        print(
+            f"FAIL: {args.path} has {len(fresh)} fresh rows with prefix "
+            f"{args.prefix!r} (need >= {args.min_rows}; {len(hits)} total, "
+            f"the rest are stale carried-forward trajectory rows); names: "
+            f"{sorted(r.get('name', '?') for r in rows)}",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"OK: {args.path}: {len(fresh)} fresh rows with prefix "
+        f"{args.prefix!r}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -62,7 +62,16 @@ def emit(name: str, us_per_call: float, derived: str = ""):
         except json.JSONDecodeError:
             rows = []
     rows = [r for r in rows if r.get("name") != name]
+    # ts marks which rows the CURRENT run actually re-emitted — rows merged
+    # forward from the committed file keep their old stamp, which is what
+    # lets benchmarks/check_emitted.py catch a smoke that silently re-emits
+    # only a subset of its rows
     rows.append(
-        {"name": name, "us_per_call": round(us_per_call, 1), "derived": derived}
+        {
+            "name": name,
+            "us_per_call": round(us_per_call, 1),
+            "derived": derived,
+            "ts": round(time.time(), 1),
+        }
     )
     path.write_text(json.dumps(rows, indent=1) + "\n")

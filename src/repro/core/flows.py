@@ -24,6 +24,15 @@ slot copy) or via the static per-bucket routing in ``run_aggregate``.
 ``FlowConfig.bucket_dispatch="loop"`` keeps the legacy one-dispatch-per-
 bucket path (eager Python loop + per-bucket scatters) for benchmarks and
 golden parity tests; see ``benchmarks/na_dispatch.py``.
+
+MULTI-DEVICE: when a concrete mesh with a ``bucket_tiles`` rule axis (the
+``("data",)`` inference mesh) is ambient, ``fused_kernel`` bucketed NA
+shards transparently — the graph's ``ShardedBucketLayout`` partitions the
+grouped tile stack by target row blocks, ``shard_map`` runs ONE kernel
+pair per shard with shard-local θ_*v gathers, and a single all-gather +
+the global inverse permutation restore target order (bit-identical to the
+single-device launch; see ``benchmarks/na_sharded.py``). With no ambient
+mesh — or ``FlowConfig.shard="off"`` — nothing changes.
 """
 from __future__ import annotations
 
@@ -36,12 +45,14 @@ import jax.numpy as jnp
 
 from repro.core import attention
 from repro.core.hetgraph import BucketedSemanticGraph, SemanticGraph
+from repro.distributed import sharding as dist
 
 # Python-side dispatch accounting (reset by benchmarks):
-#   graph_calls  — run_aggregate_graph entries on bucketed graphs
-#   bucket_calls — per-bucket NA dispatches issued by the legacy loop path
-#   traces       — retraces of the single-dispatch jit region
-DISPATCH = {"graph_calls": 0, "bucket_calls": 0, "traces": 0}
+#   graph_calls   — run_aggregate_graph entries on bucketed graphs
+#   bucket_calls  — per-bucket NA dispatches issued by the legacy loop path
+#   traces        — retraces of the single-dispatch jit region
+#   sharded_calls — bucketed NA dispatches routed to the mesh-sharded path
+DISPATCH = {"graph_calls": 0, "bucket_calls": 0, "traces": 0, "sharded_calls": 0}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,10 +63,15 @@ class FlowConfig:
     # "single": one dispatch per semantic graph (grouped kernel / one jit
     # region). "loop": legacy per-bucket loop, kept for benchmarks/parity.
     bucket_dispatch: str = "single"
+    # "auto": fused_kernel bucketed NA shard_maps over the ambient mesh's
+    # bucket_tiles axis when one is present (no-op without a mesh).
+    # "off": always the single-device path, mesh or not.
+    shard: str = "auto"
 
     def __post_init__(self):
         assert self.flow in ("staged", "staged_pruned", "fused", "fused_kernel")
         assert self.bucket_dispatch in ("single", "loop")
+        assert self.shard in ("auto", "off")
 
 
 def run_aggregate(
@@ -190,6 +206,15 @@ def run_aggregate_graph(
             # the kernel accumulates in f32; cast back like the loop path's
             # at[].set into an h_proj.dtype buffer, so the dispatch switch
             # never changes the output dtype
+            gm = dist.graph_mesh() if cfg.shard == "auto" else None
+            if gm is not None:
+                mesh, axis, _ = gm
+                DISPATCH["sharded_calls"] += 1
+                return k_ops.fused_prune_aggregate_grouped_sharded(
+                    h_proj, scores.theta_src, scores.theta_dst, sg, mesh,
+                    axis, theta_rel=scores.theta_rel, prune_k=cfg.prune_k,
+                    slope=attention.LEAKY_SLOPE,
+                ).astype(h_proj.dtype)
             return k_ops.fused_prune_aggregate_grouped(
                 h_proj, scores.theta_src, scores.theta_dst, sg,
                 theta_rel=scores.theta_rel, prune_k=cfg.prune_k,

@@ -7,7 +7,13 @@ hidden 64, heads 8, 1 layer.
 Layout-agnostic: each ``run_aggregate_graph`` call is one NA dispatch per
 metapath graph whatever the SGB layout — flat, statically bucketed, or
 autotuned — with degree buckets handled inside that single dispatch
-(grouped ragged-grid kernel under ``fused_kernel``).
+(grouped ragged-grid kernel under ``fused_kernel``). Mesh-agnostic too:
+under an ambient ``("data",)`` mesh that dispatch shard_maps across
+devices (one kernel pair per shard) and the activations below carry the
+graph logical axes (``ntype_feat`` for the global projected table, which
+must stay replicated for NA's global source gathers; ``targets`` for
+per-target outputs) so ``distributed.sharding`` rules govern their
+placement; with no mesh every annotation is a no-op.
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ from repro.core import attention, semantic_fusion
 from repro.core.flows import FlowConfig, run_aggregate_graph
 from repro.core.hetgraph import AnySemanticGraph, HetGraph
 from repro.core.projection import glorot, init_projection, project_features
+from repro.distributed.sharding import constrain
 
 
 class HAN:
@@ -58,8 +65,11 @@ class HAN:
         flow: FlowConfig = FlowConfig(),
     ) -> jax.Array:
         """Returns (num_targets, num_classes) logits for the labeled type."""
-        h = project_features(
-            params["proj"], features, node_types, self.heads, self.dh
+        h = constrain(
+            project_features(
+                params["proj"], features, node_types, self.heads, self.dh
+            ),
+            "ntype_feat", None, None,
         )
         dst_sl = slice(dst_offset, dst_offset + num_targets)
         zs = []
@@ -71,4 +81,5 @@ class HAN:
             z = run_aggregate_graph(flow, h, sc, sg)
             zs.append(jax.nn.elu(z.reshape(num_targets, self.dim)))
         z = semantic_fusion.semantic_attention(params["sem"], jnp.stack(zs))
-        return z @ params["out"]["w"] + params["out"]["b"]
+        return constrain(z @ params["out"]["w"] + params["out"]["b"],
+                         "targets", None)

@@ -7,7 +7,12 @@ heads 8, 3 layers.
 Layout-agnostic: NA is one dispatch per relation graph per layer under any
 SGB layout (flat / bucketed / autotuned); degree buckets ride inside that
 dispatch (single ragged-grid kernel launch under ``fused_kernel``), so a
-3-layer RGAT issues 3·R NA dispatches, not 3·R·num_buckets.
+3-layer RGAT issues 3·R NA dispatches, not 3·R·num_buckets. Under an
+ambient ``("data",)`` mesh each dispatch shard_maps across devices (one
+kernel pair per shard); activations carry ``ntype_feat`` (the global
+projected table — replicated, NA gathers arbitrary global ids) and
+``targets`` logical axes so sharding rules govern placement, and all
+annotations are no-ops without a mesh.
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ from repro.core import attention
 from repro.core.flows import FlowConfig, run_aggregate_graph
 from repro.core.hetgraph import AnySemanticGraph, HetGraph
 from repro.core.projection import glorot, init_projection, project_features
+from repro.distributed.sharding import constrain
 
 
 class RGAT:
@@ -66,8 +72,11 @@ class RGAT:
         num_nodes = g_meta["num_nodes"]
         h_by_type = dict(features)
         for lp in params["layers"]:
-            h = project_features(
-                lp["proj"], h_by_type, node_types, self.heads, self.dh
+            h = constrain(
+                project_features(
+                    lp["proj"], h_by_type, node_types, self.heads, self.dh
+                ),
+                "ntype_feat", None, None,
             )
             # start from the self projection; average in per-relation messages
             agg = {
@@ -89,4 +98,5 @@ class RGAT:
                 for t in node_types
             }
         z = h_by_type[g_meta["label_type"]]
-        return z @ params["out"]["w"] + params["out"]["b"]
+        return constrain(z @ params["out"]["w"] + params["out"]["b"],
+                         "targets", None)

@@ -9,7 +9,11 @@ hidden 64, heads 8, 2 layers, residual connections.
 Layout-agnostic: one NA dispatch per destination type's union graph per
 layer under any SGB layout; the per-edge-type term threads through the
 bucketed single-dispatch path (and the grouped kernel) unchanged, since
-edge-type ids are re-tiled alongside neighbor ids.
+edge-type ids are re-tiled alongside neighbor ids — including the
+mesh-sharded path, where each shard's tile slice carries its edge types.
+Under an ambient ``("data",)`` mesh each dispatch shard_maps across
+devices; activations carry the ``ntype_feat``/``targets`` logical axes
+(no-ops without a mesh).
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ from repro.core import attention
 from repro.core.flows import FlowConfig, run_aggregate_graph
 from repro.core.hetgraph import AnySemanticGraph, HetGraph
 from repro.core.projection import glorot, init_projection, project_features
+from repro.distributed.sharding import constrain
 
 
 class SimpleHGN:
@@ -76,8 +81,11 @@ class SimpleHGN:
         num_nodes = g_meta["num_nodes"]
         h_by_type = dict(features)
         for lp in params["layers"]:
-            h = project_features(
-                lp["proj"], h_by_type, node_types, self.heads, self.dh
+            h = constrain(
+                project_features(
+                    lp["proj"], h_by_type, node_types, self.heads, self.dh
+                ),
+                "ntype_feat", None, None,
             )
             rel_emb = lp["rel_emb"].reshape(-1, self.heads, self.rel_dim)
             new_h = {}
@@ -93,4 +101,5 @@ class SimpleHGN:
                 new_h[t] = jax.nn.elu(z.reshape(num_nodes[t], self.dim) + res)
             h_by_type = new_h
         z = h_by_type[g_meta["label_type"]]
-        return z @ params["out"]["w"] + params["out"]["b"]
+        return constrain(z @ params["out"]["w"] + params["out"]["b"],
+                         "targets", None)

@@ -18,6 +18,7 @@ from repro.core import hetgraph
 from repro.core.flows import FlowConfig
 from repro.core.models import HAN, RGAT, SimpleHGN
 from repro.data import synthetic
+from repro.distributed import sharding as dist_sharding
 
 
 @dataclasses.dataclass
@@ -55,6 +56,7 @@ def prepare(
     max_degree: Optional[int] = 256,
     seed: int = 0,
     bucket_sizes: Union[Sequence[int], str, None] = hetgraph.DEFAULT_BUCKET_SIZES,
+    shards: Optional[int] = None,
 ) -> HGNNTask:
     """Assemble dataset → SGB → model. ``bucket_sizes`` selects the SGB
     layout: a capacity list yields the degree-bucketed build (the default),
@@ -62,7 +64,14 @@ def prepare(
     degree histogram (``hetgraph.autotune_bucket_sizes``), ``None`` the
     flat (T, D_max) padded-CSC build. Bucketed layouts run NA as a single
     dispatch per semantic graph (one ragged-grid kernel launch under
-    ``fused_kernel``); models are layout-agnostic."""
+    ``fused_kernel``); models are layout-agnostic.
+
+    ``shards`` pre-partitions every bucketed semantic graph's grouped tile
+    stack at build time (``BucketedSemanticGraph.sharded``): ``None``
+    reads the ambient mesh's ``bucket_tiles`` axis size (no mesh → no
+    pre-split; the sharded NA path still builds splits lazily on first
+    dispatch), an int forces that split count. Inference under a mesh then
+    pays zero build-time work per dispatch."""
     g = synthetic.DATASETS[dataset](scale=scale, seed=seed)
     feats = {t: jnp.asarray(f) for t, f in g.features.items()}
     offsets = g.type_offsets()
@@ -110,6 +119,20 @@ def prepare(
 
     else:
         raise ValueError(model_name)
+
+    if shards is None:
+        gm = dist_sharding.graph_mesh()
+        shards = gm[2] if gm is not None else 0
+    if shards:
+        # the kernel's tile constants, not hetgraph's generic defaults: the
+        # sharded dispatch keys its layout cache on (n, T_TILE, W_TILE), so
+        # pre-splitting with anything else would build a split no dispatch
+        # ever reads
+        from repro.kernels.fused_prune_aggregate.kernel import T_TILE, W_TILE
+
+        for sg in sgs:
+            if isinstance(sg, hetgraph.BucketedSemanticGraph):
+                sg.sharded(shards, T_TILE, W_TILE)
 
     return HGNNTask(
         name=f"{model_name}/{dataset}",

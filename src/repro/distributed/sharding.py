@@ -9,6 +9,14 @@ parameters get PartitionSpecs from name-pattern rules via
 An axis is silently dropped when the dim size does not divide the mesh axis
 (e.g. 8 kv heads on a 16-way model axis) — XLA would pad, we prefer
 replication there and shard a different dim instead.
+
+Graph workloads add three logical axes (``bucket_tiles``, ``targets``,
+``ntype_feat``, see DEFAULT_RULES) and the concrete-mesh helpers
+(``ambient_mesh``/``graph_mesh``/``shard_map_call``/``replicate``) that the
+sharded grouped-NA inference path in ``repro.core.flows`` binds to: when a
+mesh with a ``bucket_tiles`` rule axis is ambient, bucketed NA shard_maps
+over it; with no mesh every helper degrades to a no-op and the single-
+device path runs unchanged.
 """
 from __future__ import annotations
 
@@ -42,6 +50,21 @@ DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
     "ctx_seq": (),  # encoder/image context length
     "fsdp": ("data",),  # ZeRO-3 param sharding (joined by pod when present)
     "lru": ("model",),
+    # --- HGNN graph axes (ADE semantic-graph NA) ------------------------
+    # bucket_tiles: the shard-stacked axis of a ShardedBucketLayout's
+    # grouped tile stack — the axis grouped NA shard_maps over. Its rule
+    # names the mesh axis the sharded inference path binds to.
+    "bucket_tiles": ("data",),
+    # targets: the target-vertex axis of NA outputs / logits. Replicated by
+    # default: cross-target reductions (semantic fusion's mean) must see
+    # identical operand order on every device for bit-exact parity with the
+    # single-device flow. Opt into ("data",) via axis_rules for consumers
+    # that want target-sharded outputs and can live with resharded math.
+    "targets": (),
+    # ntype_feat: per-node-type feature/activation tables. Replicated — NA
+    # gathers arbitrary global source ids, so every shard needs the full
+    # table (the paper's semantic graphs share one global vertex table).
+    "ntype_feat": (),
 }
 
 _RULES = dict(DEFAULT_RULES)
@@ -101,6 +124,97 @@ def set_mesh(mesh):
     if hasattr(jax, "set_mesh"):
         return jax.set_mesh(mesh)
     return mesh
+
+
+def ambient_mesh():
+    """The ambient CONCRETE mesh (``jax.sharding.Mesh``), or ``None``.
+
+    ``_mesh_axes`` is enough for PartitionSpec resolution, but ``shard_map``
+    needs actual devices. Compat shims, newest API first: ``get_mesh`` /
+    ``get_concrete_mesh`` (jax >= 0.5 ``jax.set_mesh`` world — the abstract
+    mesh from ``get_abstract_mesh`` has no devices and is never returned
+    here), then 0.4.x ``thread_resources`` (the ``with mesh:`` context).
+    """
+    for getter in (
+        getattr(jax.sharding, "get_mesh", None),
+        getattr(_mesh_internal, "get_concrete_mesh", None),
+    ):
+        if getter is None:
+            continue
+        try:
+            m = getter()
+        except Exception:  # pragma: no cover - depends on installed jax
+            continue
+        if m is not None and getattr(m, "devices", None) is not None:
+            if not getattr(m, "empty", False):
+                return m
+    env = getattr(_mesh_internal, "thread_resources", None)
+    if env is not None:
+        m = env.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    return None
+
+
+def graph_shard_axis(mesh=None) -> Optional[str]:
+    """The mesh axis grouped NA shards over: the first ``bucket_tiles``
+    rule axis present in ``mesh`` (ambient mesh when omitted)."""
+    axes = _axes_of(mesh) if mesh is not None else _mesh_axes()
+    for ax in _RULES.get("bucket_tiles", ()):
+        if ax in axes:
+            return ax
+    return None
+
+
+def graph_mesh():
+    """``(mesh, axis_name, n_shards)`` for sharded grouped NA, or ``None``
+    when no concrete mesh with a ``bucket_tiles`` rule axis is ambient —
+    the no-mesh no-op contract of the transparent sharding path."""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return None
+    ax = graph_shard_axis(mesh)
+    if ax is None:
+        return None
+    return mesh, ax, _axes_of(mesh)[ax]
+
+
+def shard_map_fn():
+    """``shard_map`` across jax versions: top-level ``jax.shard_map``
+    (>= 0.6) or ``jax.experimental.shard_map.shard_map`` (0.4.x)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map  # jax 0.4.x
+
+    return shard_map
+
+
+def shard_map_call(body, mesh, in_specs, out_specs):
+    """Wrap ``body`` in shard_map with replication checking off (the pallas
+    calls inside the NA body don't carry replication info). The keyword
+    spells ``check_rep`` on 0.4.x/0.5 and ``check_vma`` on newer jax."""
+    sm = shard_map_fn()
+    try:
+        return sm(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+    except TypeError:  # pragma: no cover - depends on installed jax
+        return sm(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+
+
+def replicate(x: jax.Array, mesh) -> jax.Array:
+    """Force ``x`` fully replicated over ``mesh`` — the sharded NA path's
+    single all-gather. ``with_sharding_constraint`` under a trace,
+    ``device_put`` (an actual resharding transfer) when eager."""
+    s = NamedSharding(mesh, P())
+    if isinstance(x, jax.core.Tracer):
+        return jax.lax.with_sharding_constraint(x, s)
+    return jax.device_put(x, s)
 
 
 def resolve_spec(

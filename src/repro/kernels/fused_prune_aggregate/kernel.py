@@ -63,7 +63,7 @@ W_TILE = 8
 # kernel launches that forward dispatches — up to jit-cache sharing between
 # identically-shaped call sites, which traces once but launches per call
 # (count per-graph with a cleared cache when exactness matters).
-DISPATCH = {"pallas_calls": 0, "grouped_traces": 0}
+DISPATCH = {"pallas_calls": 0, "grouped_traces": 0, "sharded_traces": 0}
 
 
 def _prune_kernel(
@@ -309,7 +309,7 @@ def fused_prune_aggregate_grouped_pallas(
     meta: jax.Array,  # (5, G) int32 per-step K1 metadata (see kernel)
     agg_meta: jax.Array,  # (2, S) int32 per-step K2 (row, slot) metadata
     h_proj: jax.Array,  # (N, H, dh)
-    perm: jax.Array,  # (T,) grouped row of each target
+    perm: jax.Array,  # (T,) grouped row of each target; None = raw rows
     k_s: int,
     t_tile: int = T_TILE,
     w: int = W_TILE,
@@ -323,7 +323,10 @@ def fused_prune_aggregate_grouped_pallas(
     (ragged too — each row contributes its own bucket's effective K steps,
     so the shared scratch width K_s never inflates the gather); the final
     gather by ``perm`` restores target order. Returns ``(T, H, dh)``
-    float32.
+    float32. ``perm=None`` skips that gather and returns the raw grouped
+    rows ``(R·t_tile, H, dh)`` — the sharded path runs one launch pair per
+    shard in grouped-row order and applies ONE global inverse permutation
+    after the shards' outputs are all-gathered.
     """
     grid_steps, _, _, h = theta_g.shape
     r = theta_dst_rows.shape[0]
@@ -380,4 +383,4 @@ def fused_prune_aggregate_grouped_pallas(
         out_shape=jax.ShapeDtypeStruct((rows, h, dh), jnp.float32),
         interpret=interpret,
     )(agg_meta, ids_safe, alpha, h_proj.astype(jnp.float32))
-    return out[perm]
+    return out if perm is None else out[perm]

@@ -415,3 +415,118 @@ def test_bucket_bypass_routing():
     deg = sg.degrees()
     assert (deg[high] > k).any()
     assert np.abs(unpruned[high] - fused[high]).max() > 1e-4
+
+
+# --------------------------------------------------------------------------
+# shard_layout: the mesh partition of the grouped tile stack is a pure
+# re-assignment of whole row blocks (device-free — pure numpy; the
+# multi-device execution parity lives in tests/test_sharded.py)
+# --------------------------------------------------------------------------
+
+def _sharded_graphs():
+    g = synthetic.DATASETS["imdb"](scale=0.08, seed=0)
+    return hetgraph.build_relation_graphs(
+        g, max_degree=48, seed=0, bucket_sizes=(4, 8, 16)
+    )
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 4, 8])
+def test_shard_layout_partitions_blocks(n_shards):
+    """Shards partition the grouped stack's row blocks: every grid step and
+    every target lands on exactly one shard, block step-runs move whole and
+    keep their in-stack order, and per-shard metadata stays bucket-local."""
+    for sg in _sharded_graphs():
+        lay = sg.grouped()
+        sl = hetgraph.shard_layout(lay, n_shards)
+        assert len(sl.shards) == n_shards
+        assert sum(s.num_steps for s in sl.shards) == lay.num_steps
+        assert sum(s.num_rows for s in sl.shards) == lay.num_rows
+        # per-target ownership: global perm covers each target exactly once
+        # and agrees with the owning shard's local perm
+        owner = sl.perm // sl.num_rows_alloc
+        local = sl.perm % sl.num_rows_alloc
+        assert owner.min() >= 0 and owner.max() < n_shards
+        for s, sh in enumerate(sl.shards):
+            mine = np.flatnonzero(owner == s)
+            np.testing.assert_array_equal(sh.perm[mine], local[mine])
+            others = np.flatnonzero(owner != s)
+            assert (sh.perm[others] == -1).all()
+            # local rows are unique and inside the shard's real rows (the
+            # trailing pad block is never a target's home)
+            assert len(np.unique(local[mine])) == mine.size
+            assert local.max(initial=-1, where=owner == s) < sh.num_rows
+            assert sh.num_rows <= sl.num_rows_alloc - sl.t_tile
+            # a shard's tile content is the original block's, verbatim, and
+            # rows resolve to the same targets
+            if mine.size:
+                t0 = mine[0]
+                np.testing.assert_array_equal(
+                    sh.row_targets[sh.perm[t0]], t0
+                )
+        # every original step appears on exactly one shard with its tile
+        # payload intact: match steps by (bucket, dt, row block's targets)
+        seen = np.zeros(lay.num_steps, bool)
+        for sh in sl.shards:
+            for i in range(sh.num_steps):
+                blk_targets = sh.row_targets[
+                    sh.step_row[i] * sh.t_tile: (sh.step_row[i] + 1) * sh.t_tile
+                ]
+                cand = np.flatnonzero(
+                    (lay.step_bucket == sh.step_bucket[i])
+                    & (lay.step_dt == sh.step_dt[i])
+                )
+                hits = [
+                    g for g in cand
+                    if np.array_equal(
+                        lay.row_targets[
+                            lay.step_row[g] * lay.t_tile:
+                            (lay.step_row[g] + 1) * lay.t_tile
+                        ],
+                        blk_targets,
+                    ) and not seen[g]
+                ]
+                assert hits, "shard step has no unmatched original step"
+                gidx = hits[0]
+                seen[gidx] = True
+                np.testing.assert_array_equal(sh.nbr[i], lay.nbr[gidx])
+                np.testing.assert_array_equal(sh.msk[i], lay.msk[gidx])
+                np.testing.assert_array_equal(sh.ety[i], lay.ety[gidx])
+        assert seen.all()
+
+
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+def test_shard_layout_balance(n_shards):
+    """LPT on per-block D-tile counts: no shard exceeds the mean padded-slot
+    load by more than one block's worth of slots (the classic LPT bound for
+    any assignment of indivisible blocks)."""
+    for sg in _sharded_graphs():
+        lay = sg.grouped()
+        sl = hetgraph.shard_layout(lay, n_shards)
+        slots = sl.padded_slots()
+        if lay.num_steps == 0:
+            continue
+        max_block = int(lay.step_ndt.max()) * lay.t_tile * lay.w
+        assert slots.max() - slots.mean() <= max_block
+        assert sl.balance() >= 1.0
+        # deterministic: same input, same assignment
+        sl2 = hetgraph.shard_layout(lay, n_shards)
+        np.testing.assert_array_equal(sl.perm, sl2.perm)
+
+
+def test_shard_layout_degenerate():
+    """More shards than row blocks: the extras stay empty but keep valid
+    (zero-step) layouts, and every target still resolves."""
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 30, size=40).astype(np.int64)
+    dst = rng.integers(0, 9, size=40).astype(np.int64)  # T=9 -> 2 blocks max
+    nbr, msk, ety = hetgraph._pad_csc(src, dst, 9, 8, np.random.default_rng(1))
+    sg = hetgraph.bucketize("tiny", ("x",), "x", nbr, msk, ety, (4,))
+    sl = sg.sharded(8)
+    assert len(sl.shards) == 8
+    nonempty = [s for s in sl.shards if s.num_steps]
+    assert 1 <= len(nonempty) <= 8
+    owner = sl.perm // sl.num_rows_alloc
+    for s in np.unique(owner):
+        assert sl.shards[s].num_rows > 0
+    # cached: same object back
+    assert sg.sharded(8) is sl

@@ -1,0 +1,170 @@
+"""Mesh-sharded grouped NA: multi-device execution parity.
+
+These tests need a multi-device jax runtime; CI's ``multidevice`` job
+provides one on CPU via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the flag must be set before jax initializes — hence an env var on the job,
+not an in-test mutation). On a single-device runtime the whole module
+skips; the device-free shard_layout invariants stay covered by
+``tests/test_sgb.py``.
+
+The load-bearing claim is BIT-EXACT parity: sharding moves whole row
+blocks, every target's retention-domain arithmetic runs on one shard with
+the same tile content in the same order as the single-device launch, and
+the final all-gather + inverse-permutation gather are exact — so logits
+must match bit for bit, not approximately.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attention, flows, hetgraph, pipeline
+from repro.core.flows import FlowConfig, run_aggregate_graph
+from repro.distributed import sharding as dist
+from repro.kernels.fused_prune_aggregate import kernel as fpa_kernel
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs >= 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+WAYS = (1, 2, 4, 8)
+KERNEL = FlowConfig("fused_kernel", prune_k=8)
+
+
+def _mesh(n):
+    return jax.sharding.Mesh(np.array(jax.devices()[:n]), ("data",))
+
+
+def _reset():
+    flows.DISPATCH.update(
+        graph_calls=0, bucket_calls=0, traces=0, sharded_calls=0
+    )
+    fpa_kernel.DISPATCH.update(
+        pallas_calls=0, grouped_traces=0, sharded_traces=0
+    )
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    return {
+        m: pipeline.prepare(
+            m, "imdb", scale=0.04, max_degree=32, seed=0,
+            bucket_sizes=(4, 8, 16),
+        )
+        for m in ("han", "rgat", "simple_hgn")
+    }
+
+
+@pytest.mark.parametrize("model", ["han", "rgat", "simple_hgn"])
+@pytest.mark.parametrize("ways", WAYS)
+def test_sharded_logits_bit_exact(tasks, model, ways):
+    task = tasks[model]
+    ref = np.asarray(task.logits(task.params, KERNEL))
+    _reset()
+    with _mesh(ways):
+        out = np.asarray(task.logits(task.params, KERNEL))
+    assert flows.DISPATCH["sharded_calls"] > 0, "mesh did not engage sharding"
+    np.testing.assert_array_equal(ref, out)
+
+
+def _custom_graph(num_targets, num_src, num_edges, max_degree, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, num_src, size=num_edges).astype(np.int64)
+    dst = rng.integers(0, num_targets, size=num_edges).astype(np.int64)
+    nbr, msk, ety = hetgraph._pad_csc(
+        src, dst, num_targets, max_degree, np.random.default_rng(seed + 1)
+    )
+    return hetgraph.bucketize("t", ("x",), "x", nbr, msk, ety, (4, 8, 16))
+
+
+def _na(sg, n_src, seed=0):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(n_src, 4, 8)), jnp.float32)
+    sc = attention.DecomposedScores(
+        jnp.asarray(rng.normal(size=(n_src, 4)), jnp.float32),
+        jnp.asarray(rng.normal(size=(sg.num_targets, 4)), jnp.float32),
+    )
+    return h, sc
+
+
+@pytest.mark.parametrize("ways", [2, 4, 8])
+def test_nondivisible_target_count(ways):
+    """T = 37: neither the target count nor its row-block count divides any
+    shard count — the pad-block filler steps and unequal per-shard rows
+    must still reproduce the single-device bits."""
+    sg = _custom_graph(num_targets=37, num_src=50, num_edges=400, max_degree=24)
+    assert sg.num_targets % ways != 0
+    h, sc = _na(sg, 50)
+    ref = np.asarray(run_aggregate_graph(KERNEL, h, sc, sg))
+    with _mesh(ways):
+        out = np.asarray(run_aggregate_graph(KERNEL, h, sc, sg))
+    np.testing.assert_array_equal(ref, out)
+    # per-shard rows genuinely differ (this is the ragged case)
+    sl = sg.sharded(ways)
+    assert len({s.num_rows for s in sl.shards}) > 1 or ways == 2
+
+
+@pytest.mark.parametrize("ways", [2, 8])
+def test_all_bypass_bucket_shards(ways):
+    """Every degree ≤ prune_k: every bucket takes the §4.3 pruner bypass, so
+    every shard is an all-bypass shard (the kernel's direct-copy branch
+    under shard_map). Must stay bit-exact."""
+    sg = _custom_graph(num_targets=33, num_src=40, num_edges=80, max_degree=6)
+    assert sg.max_degree <= KERNEL.prune_k  # bypass everywhere
+    h, sc = _na(sg, 40)
+    ref = np.asarray(run_aggregate_graph(KERNEL, h, sc, sg))
+    with _mesh(ways):
+        out = np.asarray(run_aggregate_graph(KERNEL, h, sc, sg))
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_one_pallas_pair_per_shard_per_graph():
+    """The tentpole launch invariant: under a mesh, one semantic graph's NA
+    traces exactly ONE pallas_call pair — the SPMD program every shard runs
+    — however many shards the mesh has."""
+    sg = _custom_graph(num_targets=64, num_src=80, num_edges=800, max_degree=32)
+    h, sc = _na(sg, 80)
+    with _mesh(8):
+        jax.clear_caches()
+        _reset()
+        jax.block_until_ready(run_aggregate_graph(KERNEL, h, sc, sg))
+        assert fpa_kernel.DISPATCH["pallas_calls"] == 2
+        assert fpa_kernel.DISPATCH["sharded_traces"] == 1
+        assert flows.DISPATCH["sharded_calls"] == 1
+
+
+def test_no_mesh_no_op():
+    """Without a mesh the sharded path must not engage; with shard="off" it
+    must not engage even under a mesh — and both give the same bits."""
+    sg = _custom_graph(num_targets=40, num_src=50, num_edges=300, max_degree=24)
+    h, sc = _na(sg, 50)
+    _reset()
+    ref = np.asarray(run_aggregate_graph(KERNEL, h, sc, sg))
+    assert flows.DISPATCH["sharded_calls"] == 0
+    off = FlowConfig("fused_kernel", prune_k=8, shard="off")
+    with _mesh(4):
+        _reset()
+        out = np.asarray(run_aggregate_graph(off, h, sc, sg))
+        assert flows.DISPATCH["sharded_calls"] == 0
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_prepare_presharding_under_mesh():
+    """pipeline.prepare under an ambient mesh pre-builds every semantic
+    graph's shard split at SGB time, with the SAME tile shape the sharded
+    dispatch keys its cache on (the build-time partition contract)."""
+    with _mesh(4):
+        task = pipeline.prepare(
+            "rgat", "imdb", scale=0.04, max_degree=32, seed=0,
+            bucket_sizes=(4, 8, 16),
+        )
+    key = (4, fpa_kernel.T_TILE, fpa_kernel.W_TILE)
+    for sg in task.sgs:
+        assert key in sg._sharded  # built eagerly, not lazily
+    # and with no mesh, prepare leaves split building to first dispatch
+    task2 = pipeline.prepare(
+        "rgat", "imdb", scale=0.04, max_degree=32, seed=1,
+        bucket_sizes=(4, 8, 16),
+    )
+    assert all(not sg._sharded for sg in task2.sgs)
