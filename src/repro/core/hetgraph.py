@@ -96,6 +96,79 @@ class HetGraph:
                 return r
         raise KeyError(name)
 
+    def validate(self) -> "HetGraph":
+        """Schema validation: fail fast at ingestion instead of deep inside
+        SGB. Checks edge ids against ``num_nodes``, feature/label row
+        counts, relation-name uniqueness, and endpoint-type existence.
+        Collects every violation and raises one ``ValueError``; returns
+        ``self`` so loaders can ``return g.validate()``."""
+        errs: List[str] = []
+        types = set(self.node_types)
+        if len(types) != len(self.node_types):
+            errs.append(f"duplicate node types in {self.node_types}")
+        for t in self.node_types:
+            if t not in self.num_nodes:
+                errs.append(f"node type {t!r} missing from num_nodes")
+            elif self.num_nodes[t] <= 0:
+                errs.append(f"node type {t!r} has {self.num_nodes[t]} nodes")
+            f = self.features.get(t)
+            if f is None:
+                errs.append(f"node type {t!r} has no feature table")
+            elif f.ndim != 2 or f.shape[0] != self.num_nodes.get(t, -1):
+                errs.append(
+                    f"features[{t!r}] shape {f.shape} != "
+                    f"({self.num_nodes.get(t)}, F)"
+                )
+        names = [r[1] for r in self.relations]
+        if len(set(names)) != len(names):
+            dup = sorted({n for n in names if names.count(n) > 1})
+            errs.append(f"duplicate relation names {dup}")
+        for (src_t, name, dst_t) in self.relations:
+            if src_t not in types or dst_t not in types:
+                errs.append(
+                    f"relation {name!r} endpoints ({src_t!r}, {dst_t!r}) not "
+                    f"in node types {sorted(types)}"
+                )
+                continue
+            if name not in self.edges:
+                errs.append(f"relation {name!r} has no edge list")
+                continue
+            src, dst = self.edges[name]
+            if len(src) != len(dst):
+                errs.append(
+                    f"relation {name!r}: src/dst length mismatch "
+                    f"({len(src)} vs {len(dst)})"
+                )
+            for ids, t, side in ((src, src_t, "src"), (dst, dst_t, "dst")):
+                if len(ids) == 0:
+                    continue
+                lo, hi = int(np.min(ids)), int(np.max(ids))
+                if lo < 0 or hi >= self.num_nodes.get(t, 0):
+                    errs.append(
+                        f"relation {name!r} {side} ids [{lo}, {hi}] out of "
+                        f"range for {t!r} (num_nodes={self.num_nodes.get(t)})"
+                    )
+        if self.label_type not in types:
+            errs.append(f"label_type {self.label_type!r} not a node type")
+        elif self.labels.shape[0] != self.num_nodes.get(self.label_type, -1):
+            errs.append(
+                f"labels rows {self.labels.shape[0]} != num_nodes"
+                f"[{self.label_type!r}] = {self.num_nodes.get(self.label_type)}"
+            )
+        if self.labels.size and (
+            int(self.labels.min()) < 0
+            or int(self.labels.max()) >= self.num_classes
+        ):
+            errs.append(
+                f"labels range [{int(self.labels.min())}, "
+                f"{int(self.labels.max())}] outside [0, {self.num_classes})"
+            )
+        if errs:
+            raise ValueError(
+                "HetGraph validation failed:\n  - " + "\n  - ".join(errs)
+            )
+        return self
+
     @property
     def total_nodes(self) -> int:
         return sum(self.num_nodes[t] for t in self.node_types)

@@ -17,7 +17,7 @@ import numpy as np
 from repro.core import hetgraph
 from repro.core.flows import FlowConfig
 from repro.core.models import HAN, RGAT, SimpleHGN
-from repro.data import synthetic
+from repro.data import datasets, sgb_cache
 from repro.distributed import sharding as dist_sharding
 
 
@@ -39,32 +39,60 @@ class HGNNTask:
 
 
 def _splits(n: int, seed: int = 0):
+    """60/20/20 random split. For ``n >= 3`` every split is guaranteed
+    non-empty (``int(0.2 * n)`` truncates to 0 on tiny graphs, which used
+    to hand accuracy() an empty index set); the three splits always form a
+    disjoint union of ``range(n)``."""
     rng = np.random.default_rng(seed)
     perm = rng.permutation(n)
     n_tr, n_va = int(0.6 * n), int(0.2 * n)
-    return {
+    if n >= 3:
+        n_va = max(1, n_va)
+        # test gets the remainder; keep it (and train) at least 1
+        n_tr = max(1, min(n_tr, n - n_va - 1))
+    out = {
         "train": perm[:n_tr],
         "val": perm[n_tr: n_tr + n_va],
         "test": perm[n_tr + n_va:],
     }
+    if n >= 3:
+        assert all(len(v) > 0 for v in out.values()), (n, n_tr, n_va)
+    cover = np.sort(np.concatenate(list(out.values())))
+    assert np.array_equal(cover, np.arange(n)), "splits must partition range(n)"
+    return out
 
 
 def prepare(
     model_name: str,
-    dataset: str,
+    dataset: datasets.DatasetSpec,
     scale: float = 0.1,
     max_degree: Optional[int] = 256,
     seed: int = 0,
     bucket_sizes: Union[Sequence[int], str, None] = hetgraph.DEFAULT_BUCKET_SIZES,
     shards: Optional[int] = None,
+    sgb_cache_dir: Union[str, "os.PathLike[str]", None] = None,
+    metapaths: Optional[Dict[str, Sequence[str]]] = None,
 ) -> HGNNTask:
-    """Assemble dataset → SGB → model. ``bucket_sizes`` selects the SGB
-    layout: a capacity list yields the degree-bucketed build (the default),
-    ``"auto"`` autotunes each semantic graph's capacities from its own
-    degree histogram (``hetgraph.autotune_bucket_sizes``), ``None`` the
-    flat (T, D_max) padded-CSC build. Bucketed layouts run NA as a single
-    dispatch per semantic graph (one ragged-grid kernel launch under
+    """Assemble dataset → SGB → model. ``dataset`` is resolved by
+    ``repro.data.datasets.resolve`` and is interchangeably a registry name
+    (synthetic generators, parameterized by ``scale``/``seed``), a path to
+    an on-disk HGB/OGB-style dump directory, or a ``HetGraph`` instance;
+    the graph is schema-validated either way. ``metapaths`` overrides the
+    dataset's HAN metapath table (registry datasets ship one, dumps may
+    carry one in meta.json; an in-memory ``HetGraph`` has none, so pass
+    it here). ``bucket_sizes`` selects the
+    SGB layout: a capacity list yields the degree-bucketed build (the
+    default), ``"auto"`` autotunes each semantic graph's capacities from
+    its own degree histogram (``hetgraph.autotune_bucket_sizes``), ``None``
+    the flat (T, D_max) padded-CSC build. Bucketed layouts run NA as a
+    single dispatch per semantic graph (one ragged-grid kernel launch under
     ``fused_kernel``); models are layout-agnostic.
+
+    ``sgb_cache_dir`` switches SGB to the content-addressed artifact cache
+    (``repro.data.sgb_cache.build_or_load``): the first prepare() for a
+    given (graph structure, builder args, tile constants) builds and saves
+    the bucketed stack + grouped/sharded layouts; every later process
+    loads them instead of rebuilding.
 
     ``shards`` pre-partitions every bucketed semantic graph's grouped tile
     stack at build time (``BucketedSemanticGraph.sharded``): ``None``
@@ -72,7 +100,9 @@ def prepare(
     pre-split; the sharded NA path still builds splits lazily on first
     dispatch), an int forces that split count. Inference under a mesh then
     pays zero build-time work per dispatch."""
-    g = synthetic.DATASETS[dataset](scale=scale, seed=seed)
+    g, ds_name, mps = datasets.resolve(dataset, scale=scale, seed=seed)
+    if metapaths is not None:
+        mps = metapaths
     feats = {t: jnp.asarray(f) for t, f in g.features.items()}
     offsets = g.type_offsets()
     g_meta = {
@@ -83,11 +113,22 @@ def prepare(
     }
     key = jax.random.PRNGKey(seed)
 
+    if shards is None:
+        gm = dist_sharding.graph_mesh()
+        shards = gm[2] if gm is not None else 0
+    sgb_kw = dict(
+        max_degree=max_degree, seed=seed, bucket_sizes=bucket_sizes,
+        cache_dir=sgb_cache_dir, shards=shards,
+    )
+
     if model_name == "han":
-        mps = synthetic.METAPATHS[dataset]
-        sgs = hetgraph.build_metapath_graphs(
-            g, mps, max_degree=max_degree, seed=seed, bucket_sizes=bucket_sizes
-        )
+        if not mps:
+            raise ValueError(
+                f"model 'han' needs metapaths for dataset {ds_name!r}: "
+                "registry datasets define them; on-disk dumps carry them "
+                "in meta.json"
+            )
+        sgs, _ = sgb_cache.build_or_load(g, "metapath", metapaths=mps, **sgb_kw)
         model = HAN()
         params = model.init(key, g, list(mps))
         n_t = g.num_nodes[g.label_type]
@@ -97,9 +138,7 @@ def prepare(
             return model.apply(p, feats, sgs, g.node_types, off, n_t, flow)
 
     elif model_name == "rgat":
-        sgs = hetgraph.build_relation_graphs(
-            g, max_degree=max_degree, seed=seed, bucket_sizes=bucket_sizes
-        )
+        sgs, _ = sgb_cache.build_or_load(g, "relation", **sgb_kw)
         model = RGAT()
         params = model.init(key, g, [sg.name for sg in sgs])
 
@@ -107,9 +146,7 @@ def prepare(
             return model.apply(p, feats, sgs, g_meta, flow)
 
     elif model_name == "simple_hgn":
-        union = hetgraph.build_union_graph(
-            g, max_degree=max_degree, seed=seed, bucket_sizes=bucket_sizes
-        )
+        union, _ = sgb_cache.build_or_load(g, "union", **sgb_kw)
         sgs = list(union.values())
         model = SimpleHGN()
         params = model.init(key, g, num_edge_types=sgs[0].num_edge_types)
@@ -120,14 +157,12 @@ def prepare(
     else:
         raise ValueError(model_name)
 
-    if shards is None:
-        gm = dist_sharding.graph_mesh()
-        shards = gm[2] if gm is not None else 0
     if shards:
         # the kernel's tile constants, not hetgraph's generic defaults: the
         # sharded dispatch keys its layout cache on (n, T_TILE, W_TILE), so
         # pre-splitting with anything else would build a split no dispatch
-        # ever reads
+        # ever reads. On a cache hit build_or_load already injected the
+        # split; this is a no-op then (cached per layout).
         from repro.kernels.fused_prune_aggregate.kernel import T_TILE, W_TILE
 
         for sg in sgs:
@@ -135,7 +170,7 @@ def prepare(
                 sg.sharded(shards, T_TILE, W_TILE)
 
     return HGNNTask(
-        name=f"{model_name}/{dataset}",
+        name=f"{model_name}/{ds_name}",
         model_name=model_name,
         model=model,
         graph=g,

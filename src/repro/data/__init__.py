@@ -1,2 +1,9 @@
 from repro.data.synthetic import make_acm, make_dblp, make_imdb, make_hetg  # noqa: F401
 from repro.data.tokens import TokenPipeline  # noqa: F401
+from repro.data.datasets import (  # noqa: F401
+    load_hetgraph,
+    register,
+    resolve,
+    save_hetgraph,
+)
+from repro.data.sgb_cache import build_or_load, graph_fingerprint  # noqa: F401

@@ -18,6 +18,13 @@ import numpy as np
 
 from repro.core.hetgraph import HetGraph, Relation
 
+# Generator contract version (documentation of the reproducibility
+# contract, not a cache input): graphs are deterministic per (seed, scale,
+# GENERATOR_VERSION). Bump it when the RNG consumption pattern changes so
+# released versions are comparable; SGB cache invalidation happens on its
+# own via the structure hash of the actually-emitted edge lists.
+GENERATOR_VERSION = 2
+
 
 def _power_law_degrees(rng, n, mean_deg, alpha=2.1, dmax=None):
     """Heavy-tailed integer degrees with the requested mean."""
@@ -39,25 +46,40 @@ def _bipartite_edges(
     noise_edges: float,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """src->dst edges; each dst draws a heavy-tailed number of sources,
-    mostly from its own community."""
-    n_comm = int(comm_src.max()) + 1
-    by_comm = [np.where(comm_src == c)[0] for c in range(n_comm)]
+    mostly from its own community.
+
+    Vectorized over all targets: destinations are a single ``repeat`` over
+    the degree draw, source picks one batched draw per edge (a uniform slot
+    into the destination's community pool, or a uniform global pick for the
+    ``noise_edges`` fraction and for empty pools). Same degree model, same
+    dedup semantics as the original per-target loop — the degree draw
+    consumes the identical RNG stream, so per-target degrees match the loop
+    build seed-for-seed; source picks are a different (but seed-stable)
+    stream of the same distribution.
+    """
+    # both sides bound the community id range: a community may exist only
+    # on the destination side (its source pool is then empty -> uniform
+    # fallback), which indexed out of bounds in the per-target loop build
+    n_comm = int(max(comm_src.max(), comm_dst.max())) + 1
     deg = _power_law_degrees(rng, n_dst, mean_deg_dst)
-    srcs, dsts = [], []
-    for v in range(n_dst):
-        d = deg[v]
-        same = rng.random(d) >= noise_edges
-        pool_same = by_comm[comm_dst[v]]
-        rand_picks = rng.integers(0, n_src, size=d)
-        if len(pool_same) > 0:
-            same_picks = pool_same[rng.integers(0, len(pool_same), size=d)]
-        else:
-            same_picks = rand_picks
-        picks = np.where(same, same_picks, rand_picks)
-        srcs.append(picks)
-        dsts.append(np.full(d, v, dtype=np.int64))
-    src = np.concatenate(srcs)
-    dst = np.concatenate(dsts)
+    total = int(deg.sum())
+    dst = np.repeat(np.arange(n_dst, dtype=np.int64), deg)
+    same = rng.random(total) >= noise_edges
+    rand_picks = rng.integers(0, n_src, size=total)
+    # community pools: src ids grouped by community (stable order, matching
+    # np.where per community), indexed per edge via the pool's start + a
+    # uniform offset
+    pool = np.argsort(comm_src, kind="stable")
+    pool_sizes = np.bincount(comm_src, minlength=n_comm)
+    pool_starts = np.concatenate([[0], np.cumsum(pool_sizes)[:-1]])
+    ec = comm_dst[dst]  # each edge's destination community
+    sizes = pool_sizes[ec]
+    offs = rng.integers(0, np.maximum(sizes, 1), size=total)
+    # empty-pool lanes are discarded below; clip their gather index so the
+    # vectorized lookup stays in bounds
+    same_picks = pool[np.minimum(pool_starts[ec] + offs, n_src - 1)]
+    # empty own-community pools fall back to the uniform draw
+    src = np.where(same & (sizes > 0), same_picks, rand_picks)
     key = src * n_dst + dst
     _, uniq = np.unique(key, return_index=True)
     return src[uniq].astype(np.int64), dst[uniq].astype(np.int64)
