@@ -30,15 +30,19 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return ts[len(ts) // 2]
 
 
-def bench_json_path() -> Path:
+def bench_json_path(explicit=None) -> Path:
     """BENCH file for the *emitting benchmark module*: the nearest caller
     frame outside this module (not ``sys.argv[0]``), so rows land in the
     same per-benchmark file whether a module runs standalone or via
     ``benchmarks/run.py`` — and wrappers around ``emit`` defined in
-    ``common`` don't misattribute. ``BENCH_JSON`` overrides."""
+    ``common`` don't misattribute. ``BENCH_JSON`` overrides everything;
+    ``explicit`` (a per-call ``emit(path=...)``) overrides the module-stem
+    default without any process-wide state."""
     env = os.environ.get("BENCH_JSON")
     if env:
         return Path(env)
+    if explicit is not None:
+        return Path(explicit)
     stem = ""
     frame = sys._getframe(1)
     while frame is not None:
@@ -52,9 +56,9 @@ def bench_json_path() -> Path:
     return Path(f"BENCH_{stem}.json")
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+def emit(name: str, us_per_call: float, derived: str = "", path=None):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
-    path = bench_json_path()
+    path = bench_json_path(path)
     rows = []
     if path.exists():
         try:

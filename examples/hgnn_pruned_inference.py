@@ -25,8 +25,9 @@ for model in ("han", "rgat", "simple_hgn"):
         print(f"  K={k:3d}: compute -{cut:6.1%}  acc {acc:.4f} "
               f"(Δ {acc_full - acc:+.4f})")
 
-# kernel-flow spot check (interpret-mode Pallas on CPU)
+# kernel-flow spot check (interpret-mode Pallas on CPU), served through
+# AOT-compiled sessions — one executable per flow, no per-call dispatch
 task = pipeline.prepare("han", dataset, scale=0.04, max_degree=48)
-a = np.asarray(task.logits(task.params, FlowConfig("staged_pruned", prune_k=8)))
-b = np.asarray(task.logits(task.params, FlowConfig("fused_kernel", prune_k=8)))
+a = np.asarray(task.compile(FlowConfig("staged_pruned", prune_k=8))(task.params))
+b = np.asarray(task.compile(FlowConfig("fused_kernel", prune_k=8))(task.params))
 print(f"\nPallas fused kernel == staged pruned: max|Δ| = {np.abs(a - b).max():.2e}")

@@ -5,7 +5,11 @@ Public API:
   * ``attention`` — decomposed additive attention (Eq. 2) + NA flows
   * ``pruning``   — runtime top-K retention domain (Algorithm 1, TPU-native)
   * ``flows``     — staged / staged_pruned / fused execution flows
+  * ``batch``     — ``GraphBatch``: the single model-input pytree
+  * ``session``   — ``InferenceSession``: AOT-compiled serving entry
   * ``pipeline``  — dataset → SGB → model assembly + training
-  * ``models``    — HAN, RGAT, Simple-HGN
+  * ``models``    — HAN, RGAT, Simple-HGN behind the ``HGNNModel`` protocol
 """
+from repro.core.batch import GraphBatch, ModelSpec  # noqa: F401
 from repro.core.flows import FlowConfig  # noqa: F401
+from repro.core.session import InferenceSession  # noqa: F401

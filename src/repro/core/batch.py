@@ -1,0 +1,192 @@
+"""``GraphBatch`` — the single input type every HGNN model consumes.
+
+Before this existed, each model's ``apply`` took its own ad-hoc argument
+list (``han.apply(p, feats, sgs, node_types, off, n_t, flow)`` vs
+``rgat/simple_hgn.apply(p, feats, sgs, g_meta, flow)``) and the runtime
+could only treat a model as an opaque closure. ``GraphBatch`` packs the
+whole graph-side input — the per-type feature dict, the semantic-graph
+handles driving NA, the type offset/count metadata, and the logical-axis
+annotations activations are constrained with — into one registered pytree:
+
+  * the FEATURE ARRAYS are the leaves, so a batch traces through ``jit`` /
+    ``grad`` / ``vmap`` like any array pytree;
+  * everything else (semantic graphs, offsets, axis names) rides in the
+    treedef as a single identity-hashed static token, so ``jit`` caches on
+    batch identity — pass the same batch, hit the same trace — without
+    requiring numpy-backed graph objects to be hashable.
+
+``ModelSpec`` is the build-time sibling: the shape-level facts a model's
+``init`` needs (feature dims, class count, semantic-graph names, edge-type
+count), derived from a ``HetGraph`` + its SGB output by
+:meth:`ModelSpec.from_graph`. It is a frozen, fully hashable dataclass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+
+from repro.distributed import sharding as dist_sharding
+
+# role -> logical axis names per dim (resolved by distributed.sharding
+# against whatever mesh is ambient; every annotation is a no-op without
+# one). Models ask the batch to constrain activations by role instead of
+# hard-coding axis tuples.
+DEFAULT_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    # the global projected feature table (N, H, dh): replicated — NA
+    # gathers arbitrary global source ids on every shard
+    "features": ("ntype_feat", None, None),
+    # per-target outputs / logits (T, C)
+    "logits": ("targets", None),
+}
+
+
+class _Static:
+    """Identity-hashed carrier for a batch's non-array fields.
+
+    Pytree treedefs must be hashable and comparable for ``jit`` caching;
+    semantic-graph handles are numpy-backed dataclasses that are neither.
+    Wrapping them in a ``_Static`` created ONCE per batch gives the treedef
+    identity semantics: same batch object -> same token -> jit cache hit;
+    a different batch -> a retrace, which is exactly right because its
+    graphs differ.
+    """
+
+    __slots__ = ("batch",)
+
+    def __init__(self, batch: "GraphBatch"):
+        self.batch = batch
+
+
+@jax.tree_util.register_pytree_node_class
+class GraphBatch:
+    """One heterograph's model input: features + semantic graphs + meta.
+
+    Leaves: ``features`` (dict node type -> (N_t, F_t) array). Static:
+    ``sgs`` (semantic graphs, in model dispatch order), ``node_types``
+    (global concatenation order), ``offsets``/``num_nodes`` (per-type row
+    ranges in the global vertex table), ``label_type`` and ``axes`` (the
+    logical-axis annotation table).
+    """
+
+    def __init__(
+        self,
+        features: Mapping[str, jax.Array],
+        sgs: Sequence,
+        node_types: Sequence[str],
+        offsets: Mapping[str, int],
+        num_nodes: Mapping[str, int],
+        label_type: str,
+        axes: Optional[Mapping[str, Tuple[Optional[str], ...]]] = None,
+    ):
+        self.features = dict(features)
+        self.sgs = tuple(sgs)
+        self.node_types = tuple(node_types)
+        self.offsets = dict(offsets)
+        self.num_nodes = dict(num_nodes)
+        self.label_type = label_type
+        self.axes = dict(DEFAULT_AXES if axes is None else axes)
+        self._static = _Static(self)
+
+    @classmethod
+    def from_graph(cls, g, sgs, features=None, **kw) -> "GraphBatch":
+        """Build from a ``HetGraph`` + its SGB output (list or per-dst-type
+        dict of semantic graphs). ``features`` overrides ``g.features``
+        (e.g. pre-converted device arrays)."""
+        import jax.numpy as jnp
+
+        if isinstance(sgs, dict):
+            sgs = list(sgs.values())
+        if features is None:
+            features = {t: jnp.asarray(f) for t, f in g.features.items()}
+        return cls(
+            features=features, sgs=sgs, node_types=g.node_types,
+            offsets=g.type_offsets(), num_nodes=g.num_nodes,
+            label_type=g.label_type, **kw,
+        )
+
+    # -- derived views ----------------------------------------------------
+    @property
+    def total_nodes(self) -> int:
+        return sum(self.num_nodes[t] for t in self.node_types)
+
+    @property
+    def num_targets(self) -> int:
+        """Rows of the labeled type — the logits' leading dim."""
+        return self.num_nodes[self.label_type]
+
+    @property
+    def dst_offset(self) -> int:
+        return self.offsets[self.label_type]
+
+    @property
+    def sg_by_dst(self) -> Dict[str, object]:
+        """Semantic graphs keyed by destination type (union-graph models)."""
+        return {sg.dst_type: sg for sg in self.sgs}
+
+    def constrain(self, x: jax.Array, role: str) -> jax.Array:
+        """Sharding-constrain ``x`` by its annotation role (no-op when the
+        role is unannotated or no mesh is ambient)."""
+        names = self.axes.get(role)
+        if names is None:
+            return x
+        return dist_sharding.constrain(x, *names)
+
+    # -- pytree protocol --------------------------------------------------
+    def tree_flatten(self):
+        return (self.features,), self._static
+
+    @classmethod
+    def tree_unflatten(cls, static: _Static, children):
+        src = static.batch
+        new = object.__new__(cls)
+        new.features = children[0]
+        new.sgs = src.sgs
+        new.node_types = src.node_types
+        new.offsets = src.offsets
+        new.num_nodes = src.num_nodes
+        new.label_type = src.label_type
+        new.axes = src.axes
+        new._static = static
+        return new
+
+    def __repr__(self):
+        return (
+            f"GraphBatch(types={self.node_types}, "
+            f"sgs={[sg.name for sg in self.sgs]}, "
+            f"label_type={self.label_type!r})"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Everything a model's ``init`` needs to size its parameters.
+
+    Fully hashable (tuples only), so a spec can key caches or ride as a
+    jit-static argument.
+    """
+
+    feat_dims: Tuple[Tuple[str, int], ...]  # (node type, feature dim)
+    num_classes: int
+    node_types: Tuple[str, ...]
+    sg_names: Tuple[str, ...]  # semantic-graph (metapath / relation) names
+    num_edge_types: int = 1
+
+    @classmethod
+    def from_graph(cls, g, sgs) -> "ModelSpec":
+        if isinstance(sgs, dict):
+            sgs = list(sgs.values())
+        return cls(
+            feat_dims=tuple(
+                (t, g.features[t].shape[1]) for t in g.node_types
+            ),
+            num_classes=g.num_classes,
+            node_types=tuple(g.node_types),
+            sg_names=tuple(sg.name for sg in sgs),
+            num_edge_types=max((sg.num_edge_types for sg in sgs), default=1),
+        )
+
+    @property
+    def feat_dim_map(self) -> Dict[str, int]:
+        return dict(self.feat_dims)

@@ -36,6 +36,8 @@ mesh — or ``FlowConfig.shard="off"`` — nothing changes.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import dataclasses
 import functools
 from typing import Optional, Union
@@ -52,7 +54,67 @@ from repro.distributed import sharding as dist
 #   bucket_calls  — per-bucket NA dispatches issued by the legacy loop path
 #   traces        — retraces of the single-dispatch jit region
 #   sharded_calls — bucketed NA dispatches routed to the mesh-sharded path
-DISPATCH = {"graph_calls": 0, "bucket_calls": 0, "traces": 0, "sharded_calls": 0}
+#   mesh_lookups  — ambient-mesh resolutions (dist.graph_mesh walks) paid by
+#                   NA dispatch. Hoisted: models open one mesh_scope() per
+#                   apply (≤ 1 lookup per forward, not one per semantic
+#                   graph), and an InferenceSession pins the mesh it
+#                   resolved at build time (0 lookups, even while tracing).
+DISPATCH = {
+    "graph_calls": 0, "bucket_calls": 0, "traces": 0, "sharded_calls": 0,
+    "mesh_lookups": 0,
+}
+
+# mesh-resolution scope stack, held in a ContextVar so concurrent traces
+# (a serving thread building a session while another traces eagerly) each
+# see their own stack; entries are one-slot lazy caches
+# [resolved: bool, graph_mesh() result or None]
+_UNSET = object()
+_MESH_SCOPE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_mesh_scope", default=()
+)
+
+
+@contextlib.contextmanager
+def mesh_scope(pinned=_UNSET):
+    """Scope within which the ambient graph mesh is resolved at most once.
+
+    With no argument, pushes a LAZY slot: the first NA dispatch inside the
+    scope that needs the mesh resolves it (one ``DISPATCH["mesh_lookups"]``
+    tick) and every later dispatch reuses the result. Models wrap each
+    ``apply`` in one of these. A no-arg scope opened inside an existing
+    scope reuses the enclosing slot (so a pinning caller wins over the
+    model's own lazy scope).
+
+    With ``pinned=<graph_mesh() result or None>``, pushes a PRE-RESOLVED
+    slot: no lookup ever happens inside, even at trace time — this is how
+    an ``InferenceSession`` locks NA to the mesh it resolved once at
+    session build.
+    """
+    stack = _MESH_SCOPE.get()
+    if pinned is _UNSET and stack:
+        yield  # reuse the enclosing scope's slot
+        return
+    entry = [pinned is not _UNSET, None if pinned is _UNSET else pinned]
+    token = _MESH_SCOPE.set(stack + (entry,))
+    try:
+        yield
+    finally:
+        _MESH_SCOPE.reset(token)
+
+
+def _graph_mesh_once():
+    """The scope-cached ``dist.graph_mesh()``. Outside any scope, resolves
+    every call (the unhoisted legacy behavior, still counted)."""
+    stack = _MESH_SCOPE.get()
+    if stack:
+        entry = stack[-1]
+        if not entry[0]:
+            DISPATCH["mesh_lookups"] += 1
+            entry[1] = dist.graph_mesh()
+            entry[0] = True
+        return entry[1]
+    DISPATCH["mesh_lookups"] += 1
+    return dist.graph_mesh()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,7 +268,7 @@ def run_aggregate_graph(
             # the kernel accumulates in f32; cast back like the loop path's
             # at[].set into an h_proj.dtype buffer, so the dispatch switch
             # never changes the output dtype
-            gm = dist.graph_mesh() if cfg.shard == "auto" else None
+            gm = _graph_mesh_once() if cfg.shard == "auto" else None
             if gm is not None:
                 mesh, axis, _ = gm
                 DISPATCH["sharded_calls"] += 1

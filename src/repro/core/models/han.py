@@ -4,49 +4,46 @@ Node-level attention: one GAT per metapath graph (decomposed per Eq. 2);
 semantic-level attention fuses per-metapath embeddings. Paper settings:
 hidden 64, heads 8, 1 layer.
 
-Layout-agnostic: each ``run_aggregate_graph`` call is one NA dispatch per
-metapath graph whatever the SGB layout — flat, statically bucketed, or
-autotuned — with degree buckets handled inside that single dispatch
-(grouped ragged-grid kernel under ``fused_kernel``). Mesh-agnostic too:
-under an ambient ``("data",)`` mesh that dispatch shard_maps across
-devices (one kernel pair per shard) and the activations below carry the
-graph logical axes (``ntype_feat`` for the global projected table, which
-must stay replicated for NA's global source gathers; ``targets`` for
-per-target outputs) so ``distributed.sharding`` rules govern their
-placement; with no mesh every annotation is a no-op.
+Implements the :class:`~repro.core.models.base.HGNNModel` protocol: the
+forward pass is ``layer_steps`` — one step whose ``project`` builds the
+global projected table, whose ``na`` entries run one NA dispatch per
+metapath graph (independent given ``h``), and whose ``fuse`` is the
+semantic-level attention — folded by the shared ``apply``. Layout- and
+mesh-agnostic exactly as before: each NA entry is a single dispatch under
+any SGB layout (grouped ragged-grid kernel under ``fused_kernel``), shard-
+mapped transparently under an ambient ``("data",)`` mesh, with activation
+placement governed by the batch's logical-axis annotations (``features``:
+the replicated global table NA gathers from; ``logits``: per-target).
 """
 from __future__ import annotations
-
-from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import attention, semantic_fusion
+from repro.core.batch import GraphBatch, ModelSpec
 from repro.core.flows import FlowConfig, run_aggregate_graph
-from repro.core.hetgraph import AnySemanticGraph, HetGraph
+from repro.core.models.base import HGNNModel, LayerStep
 from repro.core.projection import glorot, init_projection, project_features
-from repro.distributed.sharding import constrain
 
 
-class HAN:
+class HAN(HGNNModel):
     def __init__(self, heads: int = 8, dh: int = 8, num_layers: int = 1):
         self.heads, self.dh, self.num_layers = heads, dh, num_layers
         self.dim = heads * dh
 
-    def init(self, key, g: HetGraph, metapath_names: Sequence[str]):
+    def init(self, key, spec: ModelSpec):
         kp, ka, ks, ko = jax.random.split(key, 4)
-        feat_dims = {t: g.features[t].shape[1] for t in g.node_types}
         params = {
-            "proj": init_projection(kp, feat_dims, self.heads, self.dh),
+            "proj": init_projection(kp, spec.feat_dim_map, self.heads, self.dh),
             "attn": {},
             "sem": semantic_fusion.init_semantic_attention(ks, self.dim),
             "out": {
-                "w": glorot(ko, (self.dim, g.num_classes)),
-                "b": jnp.zeros((g.num_classes,)),
+                "w": glorot(ko, (self.dim, spec.num_classes)),
+                "b": jnp.zeros((spec.num_classes,)),
             },
         }
-        for i, mp in enumerate(metapath_names):
+        for i, mp in enumerate(spec.sg_names):
             k = jax.random.fold_in(ka, i)
             params["attn"][mp] = {
                 "a_src": glorot(k, (self.heads, self.dh)),
@@ -54,32 +51,43 @@ class HAN:
             }
         return params
 
-    def apply(
-        self,
-        params,
-        features: Dict[str, jax.Array],
-        sgs: List[AnySemanticGraph],
-        node_types,
-        dst_offset: int,
-        num_targets: int,
-        flow: FlowConfig = FlowConfig(),
-    ) -> jax.Array:
-        """Returns (num_targets, num_classes) logits for the labeled type."""
-        h = constrain(
-            project_features(
-                params["proj"], features, node_types, self.heads, self.dh
-            ),
-            "ntype_feat", None, None,
-        )
-        dst_sl = slice(dst_offset, dst_offset + num_targets)
-        zs = []
-        for sg in sgs:
-            ap = params["attn"][sg.name]
-            sc = attention.decompose_scores(
-                h, ap["a_src"], ap["a_dst"], dst_slice=dst_sl
+    def layer_steps(self, params, batch: GraphBatch, flow: FlowConfig = FlowConfig()):
+        num_targets = batch.num_targets
+        dst_sl = slice(batch.dst_offset, batch.dst_offset + num_targets)
+
+        def project(carry):
+            return batch.constrain(
+                project_features(
+                    params["proj"], carry, batch.node_types, self.heads, self.dh
+                ),
+                "features",
             )
-            z = run_aggregate_graph(flow, h, sc, sg)
-            zs.append(jax.nn.elu(z.reshape(num_targets, self.dim)))
-        z = semantic_fusion.semantic_attention(params["sem"], jnp.stack(zs))
-        return constrain(z @ params["out"]["w"] + params["out"]["b"],
-                         "targets", None)
+
+        def na_fn(sg):
+            ap = params["attn"][sg.name]
+
+            def na(h):
+                sc = attention.decompose_scores(
+                    h, ap["a_src"], ap["a_dst"], dst_slice=dst_sl
+                )
+                z = run_aggregate_graph(flow, h, sc, sg)
+                return jax.nn.elu(z.reshape(num_targets, self.dim))
+
+            return na
+
+        def fuse(carry, h, zs):
+            return semantic_fusion.semantic_attention(
+                params["sem"], jnp.stack([zs[sg.name] for sg in batch.sgs])
+            )
+
+        yield LayerStep(
+            index=0,
+            project=project,
+            na=tuple((sg.name, na_fn(sg)) for sg in batch.sgs),
+            fuse=fuse,
+        )
+
+    def readout(self, params, batch: GraphBatch, carry):
+        return batch.constrain(
+            carry @ params["out"]["w"] + params["out"]["b"], "logits"
+        )

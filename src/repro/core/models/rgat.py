@@ -4,46 +4,45 @@ One GAT per relation semantic graph per layer; per-type fusion is the mean
 over incoming relations plus the self projection. Paper settings: hidden 64,
 heads 8, 3 layers.
 
-Layout-agnostic: NA is one dispatch per relation graph per layer under any
-SGB layout (flat / bucketed / autotuned); degree buckets ride inside that
-dispatch (single ragged-grid kernel launch under ``fused_kernel``), so a
-3-layer RGAT issues 3·R NA dispatches, not 3·R·num_buckets. Under an
-ambient ``("data",)`` mesh each dispatch shard_maps across devices (one
-kernel pair per shard); activations carry ``ntype_feat`` (the global
-projected table — replicated, NA gathers arbitrary global ids) and
-``targets`` logical axes so sharding rules govern placement, and all
-annotations are no-ops without a mesh.
+Implements the :class:`~repro.core.models.base.HGNNModel` protocol:
+``layer_steps`` yields one step per layer — ``project`` re-projects the
+per-type carry into the global table, each ``na`` entry is one relation
+graph's NA dispatch, ``fuse`` averages the self projection with the
+incoming-relation messages per destination type. A 3-layer RGAT therefore
+exposes 3·R independent NA callables to the scheduler while still issuing
+3·R single dispatches (one grouped kernel launch each under
+``fused_kernel``, shard-mapped under an ambient ``("data",)`` mesh).
 """
 from __future__ import annotations
-
-from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import attention
+from repro.core.batch import GraphBatch, ModelSpec
 from repro.core.flows import FlowConfig, run_aggregate_graph
-from repro.core.hetgraph import AnySemanticGraph, HetGraph
+from repro.core.models.base import HGNNModel, LayerStep
 from repro.core.projection import glorot, init_projection, project_features
-from repro.distributed.sharding import constrain
 
 
-class RGAT:
+class RGAT(HGNNModel):
     def __init__(self, heads: int = 8, dh: int = 8, num_layers: int = 3):
         self.heads, self.dh, self.num_layers = heads, dh, num_layers
         self.dim = heads * dh
 
-    def init(self, key, g: HetGraph, rel_names: List[str]):
-        feat_dims = {t: g.features[t].shape[1] for t in g.node_types}
+    def init(self, key, spec: ModelSpec):
+        feat_dims = spec.feat_dim_map
         layers = []
         for l in range(self.num_layers):
             kl = jax.random.fold_in(key, l)
-            in_dims = feat_dims if l == 0 else {t: self.dim for t in g.node_types}
+            in_dims = (
+                feat_dims if l == 0 else {t: self.dim for t in spec.node_types}
+            )
             lp = {
                 "proj": init_projection(kl, in_dims, self.heads, self.dh),
                 "attn": {},
             }
-            for i, rn in enumerate(rel_names):
+            for i, rn in enumerate(spec.sg_names):
                 k = jax.random.fold_in(kl, 100 + i)
                 lp["attn"][rn] = {
                     "a_src": glorot(k, (self.heads, self.dh)),
@@ -54,49 +53,65 @@ class RGAT:
         return {
             "layers": layers,
             "out": {
-                "w": glorot(ko, (self.dim, g.num_classes)),
-                "b": jnp.zeros((g.num_classes,)),
+                "w": glorot(ko, (self.dim, spec.num_classes)),
+                "b": jnp.zeros((spec.num_classes,)),
             },
         }
 
-    def apply(
-        self,
-        params,
-        features: Dict[str, jax.Array],
-        sgs: List[AnySemanticGraph],
-        g_meta,  # dict: node_types, offsets, num_nodes, label_type
-        flow: FlowConfig = FlowConfig(),
-    ) -> jax.Array:
-        node_types = g_meta["node_types"]
-        offsets = g_meta["offsets"]
-        num_nodes = g_meta["num_nodes"]
-        h_by_type = dict(features)
-        for lp in params["layers"]:
-            h = constrain(
-                project_features(
-                    lp["proj"], h_by_type, node_types, self.heads, self.dh
-                ),
-                "ntype_feat", None, None,
-            )
-            # start from the self projection; average in per-relation messages
-            agg = {
-                t: [h[offsets[t]: offsets[t] + num_nodes[t]]] for t in node_types
-            }
-            for sg in sgs:
+    def layer_steps(self, params, batch: GraphBatch, flow: FlowConfig = FlowConfig()):
+        node_types = batch.node_types
+        offsets, num_nodes = batch.offsets, batch.num_nodes
+
+        for l, lp in enumerate(params["layers"]):
+
+            def project(carry, lp=lp):
+                return batch.constrain(
+                    project_features(
+                        lp["proj"], carry, node_types, self.heads, self.dh
+                    ),
+                    "features",
+                )
+
+            def na_fn(sg, lp=lp):
                 ap = lp["attn"][sg.name]
                 t = sg.dst_type
                 dst_sl = slice(offsets[t], offsets[t] + num_nodes[t])
-                sc = attention.decompose_scores(
-                    h, ap["a_src"], ap["a_dst"], dst_slice=dst_sl
-                )
-                z = run_aggregate_graph(flow, h, sc, sg)
-                agg[t].append(z)
-            h_by_type = {
-                t: jax.nn.elu(
-                    jnp.mean(jnp.stack(agg[t]), axis=0).reshape(num_nodes[t], self.dim)
-                )
-                for t in node_types
-            }
-        z = h_by_type[g_meta["label_type"]]
-        return constrain(z @ params["out"]["w"] + params["out"]["b"],
-                         "targets", None)
+
+                def na(h):
+                    sc = attention.decompose_scores(
+                        h, ap["a_src"], ap["a_dst"], dst_slice=dst_sl
+                    )
+                    return run_aggregate_graph(flow, h, sc, sg)
+
+                return na
+
+            def fuse(carry, h, zs):
+                # start from the self projection; average in per-relation
+                # messages, in semantic-graph dispatch order
+                agg = {
+                    t: [h[offsets[t]: offsets[t] + num_nodes[t]]]
+                    for t in node_types
+                }
+                for sg in batch.sgs:
+                    agg[sg.dst_type].append(zs[sg.name])
+                return {
+                    t: jax.nn.elu(
+                        jnp.mean(jnp.stack(agg[t]), axis=0).reshape(
+                            num_nodes[t], self.dim
+                        )
+                    )
+                    for t in node_types
+                }
+
+            yield LayerStep(
+                index=l,
+                project=project,
+                na=tuple((sg.name, na_fn(sg)) for sg in batch.sgs),
+                fuse=fuse,
+            )
+
+    def readout(self, params, batch: GraphBatch, carry):
+        z = carry[batch.label_type]
+        return batch.constrain(
+            z @ params["out"]["w"] + params["out"]["b"], "logits"
+        )

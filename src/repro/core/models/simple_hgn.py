@@ -6,30 +6,25 @@ term is per-edge-type, so the ADE decomposition still holds: the pruner ranks
 by (a_srcᵀh'_u + a_relᵀr'_ψ(e)), both target-independent. Paper settings:
 hidden 64, heads 8, 2 layers, residual connections.
 
-Layout-agnostic: one NA dispatch per destination type's union graph per
-layer under any SGB layout; the per-edge-type term threads through the
-bucketed single-dispatch path (and the grouped kernel) unchanged, since
-edge-type ids are re-tiled alongside neighbor ids — including the
-mesh-sharded path, where each shard's tile slice carries its edge types.
-Under an ambient ``("data",)`` mesh each dispatch shard_maps across
-devices; activations carry the ``ntype_feat``/``targets`` logical axes
-(no-ops without a mesh).
+Implements the :class:`~repro.core.models.base.HGNNModel` protocol:
+``layer_steps`` yields one step per layer whose ``na`` entries run one
+union-graph NA dispatch per destination type (edge-type ids thread through
+the bucketed single-dispatch path and the grouped kernel unchanged, sharded
+included) and whose ``fuse`` adds the residual projection per type.
 """
 from __future__ import annotations
-
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import attention
+from repro.core.batch import GraphBatch, ModelSpec
 from repro.core.flows import FlowConfig, run_aggregate_graph
-from repro.core.hetgraph import AnySemanticGraph, HetGraph
+from repro.core.models.base import HGNNModel, LayerStep
 from repro.core.projection import glorot, init_projection, project_features
-from repro.distributed.sharding import constrain
 
 
-class SimpleHGN:
+class SimpleHGN(HGNNModel):
     def __init__(
         self, heads: int = 8, dh: int = 8, num_layers: int = 2, rel_dim: int = 8
     ):
@@ -37,12 +32,14 @@ class SimpleHGN:
         self.rel_dim = rel_dim
         self.dim = heads * dh
 
-    def init(self, key, g: HetGraph, num_edge_types: int):
-        feat_dims = {t: g.features[t].shape[1] for t in g.node_types}
+    def init(self, key, spec: ModelSpec):
+        feat_dims = spec.feat_dim_map
         layers = []
         for l in range(self.num_layers):
             kl = jax.random.fold_in(key, l)
-            in_dims = feat_dims if l == 0 else {t: self.dim for t in g.node_types}
+            in_dims = (
+                feat_dims if l == 0 else {t: self.dim for t in spec.node_types}
+            )
             layers.append(
                 {
                     "proj": init_projection(kl, in_dims, self.heads, self.dh),
@@ -51,7 +48,7 @@ class SimpleHGN:
                     "a_rel": glorot(jax.random.fold_in(kl, 3), (self.heads, self.rel_dim)),
                     "rel_emb": glorot(
                         jax.random.fold_in(kl, 4),
-                        (num_edge_types, self.heads * self.rel_dim),
+                        (spec.num_edge_types, self.heads * self.rel_dim),
                     ),
                     "res": {
                         t: glorot(jax.random.fold_in(kl, 5 + i), (d, self.dim))
@@ -63,43 +60,61 @@ class SimpleHGN:
         return {
             "layers": layers,
             "out": {
-                "w": glorot(ko, (self.dim, g.num_classes)),
-                "b": jnp.zeros((g.num_classes,)),
+                "w": glorot(ko, (self.dim, spec.num_classes)),
+                "b": jnp.zeros((spec.num_classes,)),
             },
         }
 
-    def apply(
-        self,
-        params,
-        features: Dict[str, jax.Array],
-        union_sgs: Dict[str, AnySemanticGraph],
-        g_meta,
-        flow: FlowConfig = FlowConfig(),
-    ) -> jax.Array:
-        node_types = g_meta["node_types"]
-        offsets = g_meta["offsets"]
-        num_nodes = g_meta["num_nodes"]
-        h_by_type = dict(features)
-        for lp in params["layers"]:
-            h = constrain(
-                project_features(
-                    lp["proj"], h_by_type, node_types, self.heads, self.dh
-                ),
-                "ntype_feat", None, None,
-            )
-            rel_emb = lp["rel_emb"].reshape(-1, self.heads, self.rel_dim)
-            new_h = {}
-            for t in node_types:
-                sg = union_sgs[t]
-                dst_sl = slice(offsets[t], offsets[t] + num_nodes[t])
-                sc = attention.decompose_scores(
-                    h, lp["a_src"], lp["a_dst"], dst_slice=dst_sl,
-                    rel_emb=rel_emb, a_rel=lp["a_rel"],
+    def layer_steps(self, params, batch: GraphBatch, flow: FlowConfig = FlowConfig()):
+        node_types = batch.node_types
+        offsets, num_nodes = batch.offsets, batch.num_nodes
+        by_dst = batch.sg_by_dst
+
+        for l, lp in enumerate(params["layers"]):
+
+            def project(carry, lp=lp):
+                return batch.constrain(
+                    project_features(
+                        lp["proj"], carry, node_types, self.heads, self.dh
+                    ),
+                    "features",
                 )
-                z = run_aggregate_graph(flow, h, sc, sg)
-                res = h_by_type[t] @ lp["res"][t]
-                new_h[t] = jax.nn.elu(z.reshape(num_nodes[t], self.dim) + res)
-            h_by_type = new_h
-        z = h_by_type[g_meta["label_type"]]
-        return constrain(z @ params["out"]["w"] + params["out"]["b"],
-                         "targets", None)
+
+            def na_fn(sg, lp=lp):
+                t = sg.dst_type
+                dst_sl = slice(offsets[t], offsets[t] + num_nodes[t])
+
+                def na(h):
+                    rel_emb = lp["rel_emb"].reshape(-1, self.heads, self.rel_dim)
+                    sc = attention.decompose_scores(
+                        h, lp["a_src"], lp["a_dst"], dst_slice=dst_sl,
+                        rel_emb=rel_emb, a_rel=lp["a_rel"],
+                    )
+                    return run_aggregate_graph(flow, h, sc, sg)
+
+                return na
+
+            def fuse(carry, h, zs, lp=lp):
+                new_h = {}
+                for t in node_types:
+                    z = zs[by_dst[t].name]
+                    res = carry[t] @ lp["res"][t]
+                    new_h[t] = jax.nn.elu(
+                        z.reshape(num_nodes[t], self.dim) + res
+                    )
+                return new_h
+
+            yield LayerStep(
+                index=l,
+                project=project,
+                na=tuple(
+                    (by_dst[t].name, na_fn(by_dst[t])) for t in node_types
+                ),
+                fuse=fuse,
+            )
+
+    def readout(self, params, batch: GraphBatch, carry):
+        z = carry[batch.label_type]
+        return batch.constrain(
+            z @ params["out"]["w"] + params["out"]["b"], "logits"
+        )

@@ -1,22 +1,38 @@
-"""End-to-end HGNN task assembly: dataset → SGB → model → apply closure.
+"""End-to-end HGNN task assembly: dataset → SGB → model → GraphBatch.
 
-This is the piece benchmarks/examples/tests share. ``prepare()`` returns a
-``HGNNTask`` whose ``logits(params, flow)`` runs the full FP→NA→SF pipeline
-under any execution flow, and whose ``splits`` give a train/val/test node
-split for accuracy experiments.
+This is the piece benchmarks/examples/tests share. ``prepare()`` is
+TABLE-DRIVEN over the model registry (``repro.core.models.MODELS``,
+mirroring the dataset registry): each registered architecture names its
+SGB kind and factory, and the pipeline assembles dataset → semantic
+graphs → :class:`~repro.core.batch.GraphBatch` →
+:class:`~repro.core.batch.ModelSpec` → params identically for every model
+— no per-model if/elif, no per-model apply signature.
+
+The returned ``HGNNTask`` serves inference two ways:
+
+  * ``task.compile(flow)`` → an AOT-compiled
+    :class:`~repro.core.session.InferenceSession` (the serving path:
+    one executable per (flow, mesh, dtype), zero per-call Python
+    dispatch);
+  * ``task.logits(params, flow)`` — the legacy closure-shaped entry,
+    kept as a thin DEPRECATED shim over ``model.apply(params, batch,
+    flow)`` for existing callers.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Sequence, Union
+import warnings
+from typing import Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hetgraph
+from repro.core.batch import GraphBatch, ModelSpec
 from repro.core.flows import FlowConfig
-from repro.core.models import HAN, RGAT, SimpleHGN
+from repro.core.models import get_entry
+from repro.core.session import InferenceSession, mesh_fingerprint
 from repro.data import datasets, sgb_cache
 from repro.distributed import sharding as dist_sharding
 
@@ -27,15 +43,100 @@ class HGNNTask:
     model_name: str
     model: object
     graph: hetgraph.HetGraph
+    batch: GraphBatch
+    spec: ModelSpec
     params: dict
-    logits: Callable[[dict, FlowConfig], jax.Array]
     labels: jax.Array
     splits: Dict[str, np.ndarray]
     sgs: list  # semantic graphs driving NA (for stats/benchmarks)
+    _sessions: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+    _steps: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+    _warned_logits: bool = dataclasses.field(
+        default=False, repr=False, compare=False
+    )
 
     @property
     def num_edges(self) -> int:
         return int(sum(sg.num_edges for sg in self.sgs))
+
+    def logits(self, params, flow: FlowConfig = FlowConfig()) -> jax.Array:
+        """DEPRECATED shim over ``model.apply(params, batch, flow)``.
+
+        Kept so pre-protocol callers keep working bit-for-bit; new code
+        should call ``task.model.apply(params, task.batch, flow)`` for
+        one-off traces or ``task.compile(flow)`` for repeated inference.
+        """
+        if not self._warned_logits:
+            self._warned_logits = True
+            warnings.warn(
+                "HGNNTask.logits is deprecated: use "
+                "task.model.apply(params, task.batch, flow) or "
+                "task.compile(flow)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        return self.model.apply(params, self.batch, flow)
+
+    def compile(
+        self,
+        flow: FlowConfig = FlowConfig(),
+        params=None,
+        donate_params: bool = False,
+    ) -> InferenceSession:
+        """The cached AOT serving entry: ONE executable per (flow, mesh,
+        dtype, donation) — repeated calls (``accuracy`` over splits, a
+        serving loop) share it. ``params`` only provides example avals for
+        lowering (defaults to the task's init params)."""
+        if params is None:
+            params = self.params
+        gm = dist_sharding.graph_mesh()
+        # key on the full example avals (treedef + leaf shape/dtype), not
+        # just dtypes: a compile(..., params=...) with a structurally
+        # different tree must get its own executable, not a stale one
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        avals = tuple((l.shape, str(l.dtype)) for l in leaves)
+        key = (flow, mesh_fingerprint(gm), treedef, avals, donate_params)
+        sess = self._sessions.get(key)
+        if sess is None:
+            sess = InferenceSession(
+                self.model, self.batch, flow, params=params, mesh_info=gm,
+                donate_params=donate_params,
+            )
+            self._sessions[key] = sess
+        return sess
+
+    def _train_step(self, flow: FlowConfig, lr: float, weight_decay: float = 1e-4):
+        """One jitted (params, opt_state) -> (params, opt_state, loss) step,
+        cached per (flow, lr, weight_decay) so repeated ``train_hgnn`` /
+        resumed training never retrace."""
+        key = (flow, float(lr), float(weight_decay))
+        hit = self._steps.get(key)
+        if hit is not None:
+            return hit
+        from repro.optim import adamw
+
+        opt = adamw(lr=lr, weight_decay=weight_decay)
+        tr = jnp.asarray(self.splits["train"])
+        model, batch, labels = self.model, self.batch, self.labels
+
+        def loss_fn(p):
+            lg = model.apply(p, batch, flow)[tr]
+            lab = labels[tr]
+            logp = jax.nn.log_softmax(lg)
+            return -jnp.take_along_axis(logp, lab[:, None], axis=1).mean()
+
+        @jax.jit
+        def step_fn(p, s):
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            p, s = opt.update(grads, s, p)
+            return p, s, loss
+
+        self._steps[key] = (step_fn, opt)
+        return step_fn, opt
 
 
 def _splits(n: int, seed: int = 0):
@@ -73,7 +174,12 @@ def prepare(
     sgb_cache_dir: Union[str, "os.PathLike[str]", None] = None,
     metapaths: Optional[Dict[str, Sequence[str]]] = None,
 ) -> HGNNTask:
-    """Assemble dataset → SGB → model. ``dataset`` is resolved by
+    """Assemble dataset → SGB → model, table-driven over the model registry.
+
+    ``model_name`` is looked up in ``repro.core.models.MODELS`` (register
+    new architectures with ``repro.core.models.register_model``); the
+    entry's ``sgb_kind`` selects the Semantic Graph Build and everything
+    downstream is model-agnostic. ``dataset`` is resolved by
     ``repro.data.datasets.resolve`` and is interchangeably a registry name
     (synthetic generators, parameterized by ``scale``/``seed``), a path to
     an on-disk HGB/OGB-style dump directory, or a ``HetGraph`` instance;
@@ -100,17 +206,10 @@ def prepare(
     pre-split; the sharded NA path still builds splits lazily on first
     dispatch), an int forces that split count. Inference under a mesh then
     pays zero build-time work per dispatch."""
+    entry = get_entry(model_name)
     g, ds_name, mps = datasets.resolve(dataset, scale=scale, seed=seed)
     if metapaths is not None:
         mps = metapaths
-    feats = {t: jnp.asarray(f) for t, f in g.features.items()}
-    offsets = g.type_offsets()
-    g_meta = {
-        "node_types": g.node_types,
-        "offsets": offsets,
-        "num_nodes": g.num_nodes,
-        "label_type": g.label_type,
-    }
     key = jax.random.PRNGKey(seed)
 
     if shards is None:
@@ -121,41 +220,24 @@ def prepare(
         cache_dir=sgb_cache_dir, shards=shards,
     )
 
-    if model_name == "han":
+    if entry.needs_metapaths:
         if not mps:
             raise ValueError(
-                f"model 'han' needs metapaths for dataset {ds_name!r}: "
-                "registry datasets define them; on-disk dumps carry them "
-                "in meta.json"
+                f"model {model_name!r} needs metapaths for dataset "
+                f"{ds_name!r}: registry datasets define them; on-disk dumps "
+                "carry them in meta.json"
             )
-        sgs, _ = sgb_cache.build_or_load(g, "metapath", metapaths=mps, **sgb_kw)
-        model = HAN()
-        params = model.init(key, g, list(mps))
-        n_t = g.num_nodes[g.label_type]
-        off = offsets[g.label_type]
-
-        def logits(p, flow=FlowConfig()):
-            return model.apply(p, feats, sgs, g.node_types, off, n_t, flow)
-
-    elif model_name == "rgat":
-        sgs, _ = sgb_cache.build_or_load(g, "relation", **sgb_kw)
-        model = RGAT()
-        params = model.init(key, g, [sg.name for sg in sgs])
-
-        def logits(p, flow=FlowConfig()):
-            return model.apply(p, feats, sgs, g_meta, flow)
-
-    elif model_name == "simple_hgn":
-        union, _ = sgb_cache.build_or_load(g, "union", **sgb_kw)
-        sgs = list(union.values())
-        model = SimpleHGN()
-        params = model.init(key, g, num_edge_types=sgs[0].num_edge_types)
-
-        def logits(p, flow=FlowConfig()):
-            return model.apply(p, feats, union, g_meta, flow)
-
+        built, _ = sgb_cache.build_or_load(
+            g, entry.sgb_kind, metapaths=mps, **sgb_kw
+        )
     else:
-        raise ValueError(model_name)
+        built, _ = sgb_cache.build_or_load(g, entry.sgb_kind, **sgb_kw)
+    sgs = list(built.values()) if isinstance(built, dict) else list(built)
+
+    batch = GraphBatch.from_graph(g, sgs)
+    spec = ModelSpec.from_graph(g, sgs)
+    model = entry.factory()
+    params = model.init(key, spec)
 
     if shards:
         # the kernel's tile constants, not hetgraph's generic defaults: the
@@ -174,8 +256,9 @@ def prepare(
         model_name=model_name,
         model=model,
         graph=g,
+        batch=batch,
+        spec=spec,
         params=params,
-        logits=logits,
         labels=jnp.asarray(g.labels),
         splits=_splits(g.num_nodes[g.label_type], seed),
         sgs=sgs,
@@ -190,24 +273,12 @@ def train_hgnn(
     log_every: int = 0,
 ):
     """Full-batch node-classification training (inference experiments in the
-    paper run on trained models; we train in-framework)."""
-    from repro.optim import adamw
-
-    opt = adamw(lr=lr, weight_decay=1e-4)
-    tr = jnp.asarray(task.splits["train"])
-
-    def loss_fn(p):
-        lg = task.logits(p, flow)[tr]
-        lab = task.labels[tr]
-        logp = jax.nn.log_softmax(lg)
-        return -jnp.take_along_axis(logp, lab[:, None], axis=1).mean()
-
-    @jax.jit
-    def step_fn(p, s):
-        loss, grads = jax.value_and_grad(loss_fn)(p)
-        p, s = opt.update(grads, s, p)
-        return p, s, loss
-
+    paper run on trained models; we train in-framework). Always starts from
+    ``task.params``; the jitted update step is cached on the task per
+    (flow, lr), so calling ``train_hgnn`` again (a longer schedule, a
+    hyperparameter re-run) reuses one compiled step instead of
+    re-jitting."""
+    step_fn, opt = task._train_step(flow, lr)
     params, state = task.params, opt.init(task.params)
     for i in range(steps):
         params, state, loss = step_fn(params, state)
@@ -217,6 +288,10 @@ def train_hgnn(
 
 
 def accuracy(task: HGNNTask, params, flow: FlowConfig = FlowConfig(), split="test"):
+    """Split accuracy via the task's cached ``InferenceSession`` — the
+    val and test evaluations (and any repeated sweep over the same flow)
+    share ONE compiled executable instead of re-dispatching the eager
+    pipeline per call."""
     idx = jnp.asarray(task.splits[split])
-    pred = task.logits(params, flow)[idx].argmax(-1)
+    pred = task.compile(flow, params=params)(params)[idx].argmax(-1)
     return float((pred == task.labels[idx]).mean())

@@ -38,7 +38,8 @@ def _mesh(n):
 
 def _reset():
     flows.DISPATCH.update(
-        graph_calls=0, bucket_calls=0, traces=0, sharded_calls=0
+        graph_calls=0, bucket_calls=0, traces=0, sharded_calls=0,
+        mesh_lookups=0,
     )
     fpa_kernel.DISPATCH.update(
         pallas_calls=0, grouped_traces=0, sharded_traces=0
@@ -148,6 +149,31 @@ def test_no_mesh_no_op():
         out = np.asarray(run_aggregate_graph(off, h, sc, sg))
         assert flows.DISPATCH["sharded_calls"] == 0
     np.testing.assert_array_equal(ref, out)
+
+
+@pytest.mark.parametrize("model", ["han", "rgat", "simple_hgn"])
+def test_sharded_session_parity(tasks, model):
+    """An InferenceSession compiled under an 8-way mesh bakes the
+    shard_map'd NA into its executable and stays bit-identical to the
+    single-device legacy program — with ZERO per-call Python dispatch
+    (no run_aggregate_graph entries, no graph_mesh walks): the mesh was
+    resolved once at session build and pinned through the trace."""
+    task = tasks[model]
+    cfg = KERNEL
+    ref = np.asarray(
+        jax.jit(lambda p: task.model.apply(p, task.batch, cfg))(task.params)
+    )
+    with _mesh(8):
+        sess = task.compile(cfg)
+        assert sess.mesh_info is not None and sess.mesh_info[2] == 8
+        out = np.asarray(sess(task.params))
+        _reset()
+        out2 = np.asarray(sess(task.params))
+        assert flows.DISPATCH["graph_calls"] == 0
+        assert flows.DISPATCH["sharded_calls"] == 0
+        assert flows.DISPATCH["mesh_lookups"] == 0
+    np.testing.assert_array_equal(ref, out)
+    np.testing.assert_array_equal(out, out2)
 
 
 def test_prepare_presharding_under_mesh():
