@@ -1,25 +1,51 @@
-"""HGNN serving loop on the ``InferenceSession`` API.
+"""HGNN serving on the ``repro.serve`` microbatching front-end.
 
 The HGNN sibling of ``repro.launch.serve`` (the LM serving launcher):
-build a task, train briefly, ``task.compile(flow)`` ONE executable per
-execution flow, then serve a stream of repeated inference requests and
-report per-call latency — legacy eager dispatch vs the AOT session — plus
-the session's ensemble entry point (``session.batch``).
+build a task, train briefly, ``task.compile(flow)`` ONE executable, then
+replay a seeded open-loop request stream (``repro.serve.load`` — the same
+generator the load-test harness and ``benchmarks/serve_load.py`` use)
+through three serving paths and report p50/p95 latency + throughput:
+
+  * the serial one-request-at-a-time loop (one padded query dispatch per
+    request — the pre-front-end baseline);
+  * the inline microbatched front-end (saturation regime: requests pack
+    into capacity-bucketed query blocks, one forward per BLOCK);
+  * the threaded front-end (collector + double-buffered stepper threads,
+    Poisson arrivals at ``--rate`` req/s — the production shape).
+
+All three produce bit-identical logits; the deltas are pure batching.
 
     PYTHONPATH=src python examples/hgnn_serve.py --model rgat --flow fused \
-        --requests 50
+        --requests 64
 """
 from __future__ import annotations
 
 import argparse
 import time
-import warnings
 
-import jax
 import numpy as np
 
 from repro.core import flows, pipeline
 from repro.core.flows import FlowConfig
+from repro.serve import (
+    BatchPolicy,
+    InlineExecutor,
+    ServeFrontend,
+    SystemClock,
+    ThreadExecutor,
+    make_workload,
+    run_serial,
+    run_workload,
+)
+
+
+def _report(name, stats, wall=None):
+    s = stats.summary()
+    qps = s["requests"] / wall if wall else s["qps"]
+    print(f"[serve] {name:22s} p50 {s['p50_ms']:7.2f} ms   "
+          f"p95 {stats.percentile(95) * 1e3:7.2f} ms   {qps:7.1f} req/s   "
+          f"mean batch {s['mean_batch']:5.1f}  "
+          f"({s['blocks']} blocks, pad {s['pad_fraction']:.0%})")
 
 
 def main():
@@ -31,7 +57,9 @@ def main():
                     choices=("staged", "staged_pruned", "fused", "fused_kernel"))
     ap.add_argument("--prune-k", type=int, default=8)
     ap.add_argument("--scale", type=float, default=0.06)
-    ap.add_argument("--requests", type=int, default=50)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="Poisson arrival rate (req/s) for the threaded run")
     ap.add_argument("--train-steps", type=int, default=30)
     args = ap.parse_args()
 
@@ -44,40 +72,61 @@ def main():
 
     t0 = time.perf_counter()
     sess = task.compile(cfg)
-    jax.block_until_ready(sess(params))
+    full = np.asarray(sess(params))
     print(f"[serve] session compiled in {time.perf_counter() - t0:.2f}s "
           f"({sess!r})")
 
-    def loop(fn):
-        jax.block_until_ready(fn())  # warm
-        lat = []
-        for _ in range(args.requests):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn())
-            lat.append(time.perf_counter() - t0)
-        return np.array(lat)
+    policy = BatchPolicy(capacities=(1, 4, 8, 16), flush_timeout=2e-3)
+    wl = make_workload(args.requests, task.batch.num_targets, rate=None,
+                       size_range=(1, 4), seed=0)
 
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        l_legacy = loop(lambda: task.logits(params, cfg))
-    flows.DISPATCH.update(graph_calls=0, mesh_lookups=0)
-    l_sess = loop(lambda: sess(params))
-    assert flows.DISPATCH["graph_calls"] == 0  # zero Python NA dispatch
-    assert flows.DISPATCH["mesh_lookups"] == 0
+    # serial baseline: every request pays its own forward
+    run_serial(sess, params, wl, policy, SystemClock())  # warm
+    t0 = time.perf_counter()
+    serial_outs, serial_stats = run_serial(
+        sess, params, wl, policy, SystemClock()
+    )
+    t_serial = time.perf_counter() - t0
+    _report("serial loop", serial_stats, t_serial)
 
-    for name, lat in (("legacy eager", l_legacy), ("session", l_sess)):
-        print(f"[serve] {name:13s} p50 {np.median(lat)*1e3:7.2f} ms   "
-              f"p95 {np.percentile(lat, 95)*1e3:7.2f} ms   "
-              f"{args.requests / lat.sum():7.1f} req/s")
-    print(f"[serve] per-call speedup: "
-          f"{np.median(l_legacy) / np.median(l_sess):.1f}x")
+    # microbatched, inline-driven (saturation regime)
+    flows.DISPATCH["query_calls"] = 0
+    fe = ServeFrontend(sess, params, policy, clock=SystemClock(),
+                       executor=InlineExecutor())
+    t0 = time.perf_counter()
+    futs = run_workload(fe, wl)
+    t_micro = time.perf_counter() - t0
+    _report("microbatched (inline)", fe.stats, t_micro)
+    for w, f, s_out in zip(wl, futs, serial_outs):
+        assert np.array_equal(f.result(0), full[w.targets])
+        assert np.array_equal(f.result(0), s_out)  # pure batching, same bits
+    print(f"[serve] microbatching speedup: {t_serial / t_micro:.1f}x "
+          f"({serial_stats.blocks} forwards -> {fe.stats.blocks} blocks, "
+          f"{flows.DISPATCH['query_calls']} Python dispatches)")
 
-    # ensemble serving: several weight sets against one executable
-    outs = sess.batch([params, task.params])
-    agree = float((np.asarray(outs[0]).argmax(-1)
-                   == np.asarray(outs[1]).argmax(-1)).mean())
-    print(f"[serve] session.batch over 2 weight sets: trained-vs-init "
-          f"prediction agreement {agree:.1%}")
+    # threaded front-end under paced Poisson arrivals
+    wl_paced = make_workload(args.requests, task.batch.num_targets,
+                             rate=args.rate, size_range=(1, 4), seed=1)
+    with ServeFrontend(sess, params, policy, clock=SystemClock(),
+                       executor=ThreadExecutor()) as fe_t:
+        run_workload(fe_t, wl_paced)
+    _report(f"threaded @{args.rate:.0f}/s", fe_t.stats)
+
+    # multi-tenant: trained + initial weights through one executable
+    from repro.serve import WeightPlane
+    plane = WeightPlane(params)
+    plane.publish("trained", params)
+    plane.publish("init", task.params)
+    fe_mt = ServeFrontend(sess, plane, policy, clock=SystemClock(),
+                          executor=InlineExecutor())
+    wl_mt = make_workload(args.requests, task.batch.num_targets, rate=None,
+                          tenants=("trained", "init"), seed=2)
+    futs = run_workload(fe_mt, wl_mt)
+    ref = {"trained": full, "init": np.asarray(sess(task.params))}
+    for w, f in zip(wl_mt, futs):
+        assert np.array_equal(f.result(0), ref[w.tenant][w.targets])
+    print(f"[serve] multi-tenant: {fe_mt.stats.blocks} single-tenant blocks "
+          f"served 2 weight versions through one executable")
 
 
 if __name__ == "__main__":

@@ -59,9 +59,13 @@ from repro.distributed import sharding as dist
 #                   apply (≤ 1 lookup per forward, not one per semantic
 #                   graph), and an InferenceSession pins the mesh it
 #                   resolved at build time (0 lookups, even while tracing).
+#   query_calls   — query-block executable dispatches
+#                   (InferenceSession.query). The serving amortization
+#                   evidence: a microbatching front-end serves N requests
+#                   with ~N/capacity of these, the serial loop pays N.
 DISPATCH = {
     "graph_calls": 0, "bucket_calls": 0, "traces": 0, "sharded_calls": 0,
-    "mesh_lookups": 0,
+    "mesh_lookups": 0, "query_calls": 0,
 }
 
 # mesh-resolution scope stack, held in a ContextVar so concurrent traces

@@ -28,12 +28,35 @@ and ≥ 2x lower per-call host overhead on repeated inference.
 ``donate_params=True`` additionally donates the parameter buffers to the
 executable — for serving patterns that stream in fresh weights each call
 (the caller's arrays are INVALIDATED; never use it with params you reuse).
+
+QUERY-SLICED SERVING (``session.query``): production traffic is not "give
+me every target's logits" — it is thousands of concurrent requests each
+asking for a HANDFUL of target vertices (possibly under different weight
+versions). ``session.query(params, idx)`` serves one padded query block:
+``idx`` is an int32 vector of target ids whose length is the block's
+CAPACITY, and the call returns the ``(capacity, num_classes)`` logits rows
+for those ids. Two-stage by design: the block dispatches THE session
+executable (the same compiled forward every path runs — which is what
+makes microbatched, serial, and full-forward results bit-identical BY
+CONSTRUCTION; a fused forward+slice program would let XLA re-fuse the
+forward differently per capacity, observed 1-ULP drift under
+``fused_kernel``), then a tiny per-capacity gather program slices the
+requested rows on device. Gather programs are AOT-compiled per capacity
+and cached, so a front-end that pads every microbatch to a capacity from
+a fixed bucket ladder — see ``repro.serve`` — never retraces ANY
+program: request batching reuses the degree-bucket idea (pad to the
+tightest capacity) at the REQUEST level. The per-block cost is one full
+forward regardless of how many requests share the block, which is
+exactly why microbatching pays (and why the future ego-subgraph
+extraction path keeps the same entry point: extracted ego-batches are
+query blocks whose forward stage shrinks to O(neighborhood)).
 """
 from __future__ import annotations
 
 from typing import List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import flows
 from repro.core.batch import GraphBatch
@@ -92,10 +115,72 @@ class InferenceSession:
         )
         self.lowered = self._jitted.lower(params)
         self._executable = self.lowered.compile()
+        # query-sliced serving state: the output aval (shape/dtype AND
+        # sharding, so gather programs accept the executable's committed
+        # output under a mesh) plus one cached gather program per block
+        # capacity
+        self._out_aval = self._output_aval(fn, params)
+        self._gathers: dict = {}
 
     def __call__(self, params) -> jax.Array:
         """(num_targets, num_classes) logits; one executable dispatch."""
         return self._executable(params)
+
+    # -- query-sliced serving ---------------------------------------------
+    def _output_aval(self, fn, params):
+        """Aval of the forward output, including the compiled executable's
+        output sharding, so gather programs lowered against it accept the
+        executable's committed output directly (mesh or not)."""
+        sds = jax.eval_shape(fn, params)
+        try:
+            sharding = self._executable.output_shardings
+        except Exception:  # pragma: no cover - old-jax fallback
+            sharding = None
+        if sharding is None:
+            return sds
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sharding)
+
+    def compile_query(self, capacity: int):
+        """The AOT gather program serving ``(capacity,)`` query blocks:
+        built once per capacity (cheap — it lowers ``out[idx]`` against
+        the forward's output aval, NOT another full forward), cached on
+        the session. A serving front-end pre-warms its whole capacity
+        ladder with this before taking traffic
+        (``repro.serve.ServeFrontend`` does)."""
+        capacity = int(capacity)
+        if capacity < 1:
+            raise ValueError(f"query capacity must be >= 1, got {capacity}")
+        exe = self._gathers.get(capacity)
+        if exe is None:
+            exe = jax.jit(lambda out, idx: out[idx]).lower(
+                self._out_aval,
+                jax.ShapeDtypeStruct((capacity,), jnp.int32),
+            ).compile()
+            self._gathers[capacity] = exe
+        return exe
+
+    def query(self, params, idx) -> jax.Array:
+        """Logits for one padded query block: ``idx`` is an int32 vector of
+        target ids (length = the block capacity), the result is the
+        ``(len(idx), num_classes)`` rows ``session(params)[idx]`` —
+        BIT-IDENTICAL to slicing the full-forward output, because it IS
+        the full-forward executable plus a cached on-device gather (the
+        forward output never visits the host between the two dispatches).
+        Padded slots should repeat a valid id; callers discard their
+        rows."""
+        idx = jnp.asarray(idx, jnp.int32)
+        if idx.ndim != 1:
+            raise ValueError(f"query block must be a 1-D id vector, got "
+                             f"shape {idx.shape}")
+        gather = self.compile_query(idx.shape[0])
+        out = self._executable(params)
+        flows.DISPATCH["query_calls"] += 1
+        return gather(out, idx)
+
+    @property
+    def query_capacities(self) -> Tuple[int, ...]:
+        """Capacities with a compiled gather program, ascending."""
+        return tuple(sorted(self._gathers))
 
     def batch(self, params_list: Sequence) -> List[jax.Array]:
         """Serve several parameter sets against the same compiled

@@ -1,0 +1,48 @@
+"""Async microbatching serving front-end over ``InferenceSession``.
+
+The request-scale layer: concurrent target-vertex queries are collected
+into padded capacity-bucketed query blocks (one AOT executable per
+capacity — never retraces), stepped through a double-buffered
+collector/stepper loop, and routed across tenant weight versions sharing
+ONE compiled executable. See ``src/repro/serve/README.md``.
+"""
+from repro.serve.clock import (
+    Clock,
+    FakeClock,
+    InlineExecutor,
+    SystemClock,
+    ThreadExecutor,
+)
+from repro.serve.frontend import ServeFrontend, ServeStats
+from repro.serve.load import Workload, make_workload, run_serial, run_workload
+from repro.serve.plane import WeightPlane, param_avals
+from repro.serve.queueing import (
+    BatchPolicy,
+    QueryBlock,
+    Request,
+    RequestQueue,
+    ServeFuture,
+    tune_capacities,
+)
+
+__all__ = [
+    "BatchPolicy",
+    "Clock",
+    "FakeClock",
+    "InlineExecutor",
+    "QueryBlock",
+    "Request",
+    "RequestQueue",
+    "ServeFrontend",
+    "ServeFuture",
+    "ServeStats",
+    "SystemClock",
+    "ThreadExecutor",
+    "WeightPlane",
+    "Workload",
+    "make_workload",
+    "param_avals",
+    "run_serial",
+    "run_workload",
+    "tune_capacities",
+]

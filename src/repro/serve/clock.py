@@ -1,0 +1,94 @@
+"""The injectable clock/executor seam the serving loop is built on.
+
+Every time-dependent decision in ``repro.serve`` — flush-timeout expiry,
+latency stamps, open-loop arrival pacing — goes through a ``Clock``, and
+every concurrency decision goes through an ``Executor``. Production runs
+``SystemClock`` + ``ThreadExecutor`` (a collector thread drains the queue
+while a stepper thread steps the session). Tests run ``FakeClock`` +
+``InlineExecutor``: the test advances time explicitly and drives the loop
+with ``frontend.pump()``, so queue saturation, timeout flushes, and
+p50/p99 accounting are exercised with ZERO real sleeps and zero threads —
+the whole load test is deterministic by construction (the grl2
+actor/learner decoupling, with the wall clock abstracted out).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List
+
+
+class Clock:
+    """Monotonic time source + sleep; the only two time ops serving uses."""
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def sleep(self, dt: float) -> None:
+        raise NotImplementedError
+
+
+class SystemClock(Clock):
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+
+class FakeClock(Clock):
+    """Deterministic manual time. ``sleep`` ADVANCES the clock (so a paced
+    open-loop load generator runs instantly but stamps honest arrival
+    times); ``advance`` moves time without a sleep (the test aging the
+    queue past a flush timeout). Every sleep is recorded for asserting
+    pacing behavior."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+        self.sleeps: List[float] = []
+
+    def now(self) -> float:
+        return self._t
+
+    def sleep(self, dt: float) -> None:
+        self.sleeps.append(float(dt))
+        if dt > 0:
+            self._t += float(dt)
+
+    def advance(self, dt: float) -> None:
+        assert dt >= 0, dt
+        self._t += float(dt)
+
+
+class InlineExecutor:
+    """No threads: the front-end stays passive and the caller drives it
+    with ``pump()``. ``spawn`` is a loud error — nothing in inline mode
+    may depend on a background loop existing."""
+
+    threaded = False
+
+    def spawn(self, name: str, fn: Callable[[], None]):
+        raise RuntimeError(
+            f"InlineExecutor cannot spawn {name!r}: drive the front-end "
+            "with pump()/flush() instead"
+        )
+
+
+class ThreadExecutor:
+    """Daemon threads, tracked for join-on-close."""
+
+    threaded = True
+
+    def __init__(self):
+        self.threads: List[threading.Thread] = []
+
+    def spawn(self, name: str, fn: Callable[[], None]) -> threading.Thread:
+        t = threading.Thread(target=fn, name=name, daemon=True)
+        t.start()
+        self.threads.append(t)
+        return t
+
+    def join(self, timeout: float = 10.0) -> None:
+        for t in self.threads:
+            t.join(timeout)

@@ -1,0 +1,304 @@
+"""``ServeFrontend`` — the async microbatching loop over a session.
+
+Two decoupled roles (the grl2 actor/learner split, serving-shaped):
+
+  * the COLLECTOR drains the request queue into padded
+    :class:`~repro.serve.queueing.QueryBlock`\\ s (host-side numpy
+    assembly) and feeds a bounded block pipe;
+  * the STEPPER pops blocks and steps the session's query executable —
+    DOUBLE-BUFFERED: it dispatches block *k+1* to the device before
+    resolving block *k*'s result, so host-side batch assembly and future
+    completion overlap device execution and the executable never idles
+    waiting on Python.
+
+Both roles go through the clock/executor seam (``repro.serve.clock``):
+``ThreadExecutor`` runs them as real threads for production,
+``InlineExecutor`` leaves the front-end passive so tests and deterministic
+benchmarks drive the SAME drain → dispatch → resolve code with
+``pump()`` — no sleeps, no races, same double-buffered dispatch window.
+
+Every block capacity in the policy ladder is AOT-compiled at construction
+(``session.compile_query``), so serving never retraces — a new shape is
+impossible by construction. Tenant routing happens at block granularity:
+each block runs under the weights ``WeightPlane.checkout(tenant)`` returns.
+"""
+from __future__ import annotations
+
+import queue as _queue
+import threading
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.serve.clock import Clock, InlineExecutor, SystemClock, ThreadExecutor
+from repro.serve.plane import WeightPlane
+from repro.serve.queueing import (
+    BatchPolicy,
+    QueryBlock,
+    RequestQueue,
+    ServeFuture,
+)
+
+
+class ServeStats:
+    """Serving accounting on the injected clock — with a ``FakeClock``
+    every quantity below is exactly computable by the test."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.latencies: List[float] = []
+        self.block_sizes: List[int] = []
+        self.submitted = 0
+        self.completed = 0
+        self.blocks = 0
+        self.valid_slots = 0
+        self.padded_slots = 0
+        self.t_first_submit: Optional[float] = None
+        self.t_last_done: Optional[float] = None
+
+    def on_submit(self, now: float) -> None:
+        with self._lock:
+            self.submitted += 1
+            if self.t_first_submit is None:
+                self.t_first_submit = now
+
+    def on_block(self, blk: QueryBlock, now: float) -> None:
+        with self._lock:
+            self.blocks += 1
+            self.block_sizes.append(blk.n_valid)
+            self.valid_slots += blk.n_valid
+            self.padded_slots += blk.padded_slots
+            self.completed += len(blk.requests)
+            for req, _ in blk.requests:
+                self.latencies.append(now - req.t_submit)
+            self.t_last_done = now
+
+    def percentile(self, q: float) -> float:
+        with self._lock:
+            if not self.latencies:
+                return float("nan")
+            return float(np.percentile(np.asarray(self.latencies), q))
+
+    @property
+    def pad_fraction(self) -> float:
+        tot = self.valid_slots + self.padded_slots
+        return self.padded_slots / tot if tot else 0.0
+
+    def qps(self) -> float:
+        """Completed requests over the submit→last-completion window."""
+        if (
+            self.t_first_submit is None or self.t_last_done is None
+            or self.t_last_done <= self.t_first_submit
+        ):
+            return float("nan")
+        return self.completed / (self.t_last_done - self.t_first_submit)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests": self.completed,
+            "blocks": self.blocks,
+            "p50_ms": self.percentile(50) * 1e3,
+            "p99_ms": self.percentile(99) * 1e3,
+            "qps": self.qps(),
+            "mean_batch": (
+                float(np.mean(self.block_sizes)) if self.block_sizes else 0.0
+            ),
+            "pad_fraction": self.pad_fraction,
+        }
+
+
+class ServeFrontend:
+    """Microbatching serving front-end over one ``InferenceSession``.
+
+    ``plane`` may be a :class:`WeightPlane` (multi-tenant) or a bare param
+    tree (wrapped as the single ``"default"`` tenant). With a threaded
+    executor call ``start()`` (or use the context manager) before
+    submitting; with ``InlineExecutor`` just ``submit`` + ``pump``.
+    """
+
+    _PIPE_DEPTH = 2  # double buffer: one block in flight, one staged
+
+    def __init__(
+        self,
+        session,
+        plane,
+        policy: BatchPolicy = BatchPolicy(),
+        clock: Optional[Clock] = None,
+        executor=None,
+    ):
+        if not isinstance(plane, WeightPlane):
+            params = plane
+            plane = WeightPlane(params, stream=session.donate_params)
+            plane.publish("default", params)
+        if session.donate_params and not plane.stream:
+            raise ValueError(
+                "a donate_params session consumes its input buffers: pair "
+                "it with WeightPlane(stream=True)"
+            )
+        self.session = session
+        self.plane = plane
+        self.policy = policy
+        self.clock = clock if clock is not None else SystemClock()
+        self.executor = executor if executor is not None else ThreadExecutor()
+        self.stats = ServeStats()
+        self.queue = RequestQueue()
+        # pre-warm the whole ladder: serving can never meet a new shape
+        for cap in policy.capacities:
+            session.compile_query(cap)
+
+        self._pipe: "_queue.Queue[Optional[QueryBlock]]" = _queue.Queue(
+            maxsize=self._PIPE_DEPTH
+        )
+        self._inflight = None  # (block, device_out) staged by the stepper
+        self._outstanding: set = set()
+        self._outstanding_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._started = False
+        self._closed = False
+
+    # -- request side ------------------------------------------------------
+    def submit(self, targets, tenant: str = "default") -> ServeFuture:
+        """Enqueue one query; returns its future. Never blocks."""
+        if self._closed:
+            raise RuntimeError("front-end is closed")
+        if tenant not in self.plane:
+            raise KeyError(
+                f"unknown tenant {tenant!r}; published: {self.plane.tenants()}"
+            )
+        now = self.clock.now()
+        req = self.queue.put(targets, tenant, now, self.policy.max_batch)
+        with self._outstanding_lock:
+            self._outstanding.add(req.future)
+        self.stats.on_submit(now)
+        return req.future
+
+    # -- the drain → dispatch → resolve core (both modes share it) ---------
+    def _dispatch(self, blk: QueryBlock):
+        params = self.plane.checkout(blk.tenant)
+        return self.session.query(params, blk.idx)
+
+    def _resolve(self, staged) -> None:
+        if staged is None:
+            return
+        blk, out = staged
+        try:
+            rows = np.asarray(jax.block_until_ready(out))
+        except Exception as exc:  # pragma: no cover - device failure path
+            rows, error = None, exc
+        else:
+            error = None
+        # account BEFORE completing futures: a flush() waiting on the last
+        # future must observe final stats the moment it unblocks
+        self.stats.on_block(blk, self.clock.now())
+        with self._outstanding_lock:
+            for req, _ in blk.requests:
+                self._outstanding.discard(req.future)
+        for req, slc in blk.requests:
+            if error is not None:
+                req.future.set_exception(error)
+            else:
+                req.future.set_result(rows[slc])
+
+    def _step(self, blk: QueryBlock) -> None:
+        """Double-buffered step: dispatch this block, then resolve the
+        PREVIOUS one — its device work overlapped this dispatch."""
+        out = self._dispatch(blk)
+        prev, self._inflight = self._inflight, (blk, out)
+        self._resolve(prev)
+
+    def _drain_inflight(self) -> None:
+        prev, self._inflight = self._inflight, None
+        self._resolve(prev)
+
+    # -- inline mode -------------------------------------------------------
+    def pump(self, force: bool = False) -> int:
+        """Run one collector+stepper iteration synchronously (inline
+        mode): drain emit-ready blocks at the current clock time, step
+        each through the double-buffered window, resolve the tail.
+        Returns the number of blocks executed."""
+        assert not self.executor.threaded, "pump() is for inline mode"
+        blocks = self.queue.drain(self.policy, self.clock.now(), force=force)
+        for blk in blocks:
+            self._step(blk)
+        self._drain_inflight()
+        return len(blocks)
+
+    # -- threaded mode -----------------------------------------------------
+    def start(self) -> "ServeFrontend":
+        if self.executor.threaded and not self._started:
+            self._started = True
+            self.executor.spawn("serve-collector", self._collect_loop)
+            self.executor.spawn("serve-stepper", self._step_loop)
+        return self
+
+    def _collect_loop(self) -> None:
+        while True:
+            stopping = self._stop.is_set()
+            seen = self.queue.version  # snapshot BEFORE draining
+            blocks = self.queue.drain(
+                self.policy, self.clock.now(), force=stopping
+            )
+            for blk in blocks:
+                self._pipe.put(blk)  # bounded: backpressure to the queue
+            if stopping and len(self.queue) == 0:
+                self._pipe.put(None)
+                return
+            deadline = self.queue.next_deadline(self.policy)
+            timeout = (
+                None if deadline is None
+                else max(0.0, deadline - self.clock.now())
+            )
+            self.queue.wait_for(
+                lambda: self.queue.version != seen or self._stop.is_set(),
+                timeout,
+            )
+
+    def _step_loop(self) -> None:
+        while True:
+            blk = self._pipe.get()
+            while True:
+                if blk is None:
+                    self._drain_inflight()
+                    return
+                self._step(blk)
+                # keep the window full while blocks are back-to-back; the
+                # moment the pipe runs dry, resolve the staged block
+                # instead of parking it until the next burst
+                try:
+                    blk = self._pipe.get_nowait()
+                except _queue.Empty:
+                    self._drain_inflight()
+                    break
+
+    def flush(self, timeout: float = 30.0) -> None:
+        """Wait until every submitted request has been served. Inline
+        mode force-pumps; threaded mode waits on the outstanding futures
+        (the loops keep running)."""
+        if not self.executor.threaded:
+            self.pump(force=True)
+            assert len(self.queue) == 0
+            return
+        with self._outstanding_lock:
+            waiting = list(self._outstanding)
+        for fut in waiting:
+            fut.result(timeout)
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Serve everything still queued, then stop the loops."""
+        if self._closed:
+            return
+        self._closed = True
+        if self.executor.threaded:
+            if self._started:
+                self._stop.set()
+                self.queue.notify_all()
+                self.executor.join(timeout)
+        else:
+            self.pump(force=True)
+
+    def __enter__(self) -> "ServeFrontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()

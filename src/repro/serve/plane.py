@@ -1,0 +1,91 @@
+"""``WeightPlane`` — several parameter versions behind ONE executable.
+
+A session's compiled executables are specialized to the parameter tree's
+avals (structure + leaf shape/dtype), not to the values — so every param
+version with matching avals (A/B arms, per-tenant fine-tunes, a freshly
+trained checkpoint) can share the same compiled program. The plane is the
+registry enforcing that: ``publish`` validates a version against the
+reference avals ONCE, loudly, so a mismatched tenant fails at publish
+time instead of surfacing as a cryptic executable aval error mid-traffic.
+
+``stream=True`` is the weight-streaming mode paired with a
+``donate_params=True`` session: versions are kept as HOST arrays and
+``checkout`` materializes fresh device buffers per block, which the
+donating executable is then free to consume — at any moment roughly one
+tenant's weights occupy device memory instead of all of them. With
+``stream=False`` (default) versions live on device and ``checkout`` is a
+dict lookup.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+
+def param_avals(params) -> Tuple:
+    """Hashable (treedef, per-leaf shape/dtype) identity of a param tree —
+    the compatibility contract two versions must share to be served by
+    one compiled executable."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return treedef, tuple(
+        (tuple(np.shape(l)), str(np.asarray(l).dtype)) for l in leaves
+    )
+
+
+class WeightPlane:
+    """Named parameter versions, all aval-compatible with a reference."""
+
+    def __init__(self, reference_params, stream: bool = False):
+        self.stream = bool(stream)
+        self._ref_avals = param_avals(reference_params)
+        self._versions: Dict[str, object] = {}
+
+    def publish(self, tenant: str, params) -> None:
+        """Install/replace ``tenant``'s weights (validated against the
+        reference avals). In stream mode the plane snapshots HOST copies,
+        so the caller's arrays are never donated out from under it."""
+        avals = param_avals(params)
+        if avals != self._ref_avals:
+            raise ValueError(
+                f"tenant {tenant!r} params are not aval-compatible with "
+                f"this plane's executable: {_aval_diff(self._ref_avals, avals)}"
+            )
+        if self.stream:
+            params = jax.tree_util.tree_map(
+                lambda l: np.array(np.asarray(l)), params
+            )
+        self._versions[tenant] = params
+
+    def checkout(self, tenant: str):
+        """The params to run ``tenant``'s next block with. Stream mode
+        returns FRESH device buffers (safe to donate); resident mode
+        returns the shared device tree (must not be donated)."""
+        try:
+            params = self._versions[tenant]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {tenant!r}; published: {sorted(self._versions)}"
+            ) from None
+        if self.stream:
+            return jax.tree_util.tree_map(jax.device_put, params)
+        return params
+
+    def tenants(self) -> List[str]:
+        return sorted(self._versions)
+
+    def __contains__(self, tenant: str) -> bool:
+        return tenant in self._versions
+
+    def __len__(self) -> int:
+        return len(self._versions)
+
+
+def _aval_diff(ref: Tuple, got: Tuple) -> str:
+    if ref[0] != got[0]:
+        return "tree structure differs"
+    bad = [
+        f"{r} vs {g}" for r, g in zip(ref[1], got[1]) if r != g
+    ]
+    return "leaf avals differ: " + "; ".join(bad[:3])

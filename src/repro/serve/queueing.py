@@ -1,0 +1,288 @@
+"""Request queue + capacity-bucketed microbatching.
+
+A request is "logits for these target vertices, under this tenant's
+weights". The queue collects concurrent requests and ``drain`` packs them
+into :class:`QueryBlock`\\ s — padded int32 id vectors whose length comes
+from a FIXED capacity ladder (:class:`BatchPolicy`), so the downstream
+``InferenceSession.query`` executables never see a new shape and never
+retrace. This is the degree-bucket idea applied at the request level:
+degree buckets pad neighbor rows to the tightest capacity; query buckets
+pad request microbatches the same way, and :func:`tune_capacities` reuses
+the SAME DP (``hetgraph.autotune_bucket_sizes``) over an observed
+batch-size histogram instead of a degree histogram.
+
+Flush policy (the microbatching contract, asserted in
+``tests/test_serve.py``):
+
+  * SATURATION — while a tenant's pending targets fill the largest
+    capacity, full blocks are emitted immediately (no timeout waits);
+  * TIMEOUT — a partial block is emitted once its oldest request has
+    waited ``flush_timeout`` seconds (bounded tail latency);
+  * FORCE — ``drain(..., force=True)`` flushes everything (shutdown).
+
+Requests are never split across blocks (a request's rows come back from
+one executable dispatch) and never reordered within a tenant (FIFO), and
+blocks are single-tenant — tenant routing happens here, not on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hetgraph import autotune_bucket_sizes
+
+
+class ServeFuture:
+    """Completion handle for one request: ``result(timeout)`` returns the
+    ``(num_query_targets, num_classes)`` logits rows (or re-raises the
+    serving error). Thread-safe; in inline mode it is completed
+    synchronously during ``pump()``."""
+
+    __slots__ = ("_event", "_value", "_error")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def set_result(self, value) -> None:
+        self._value = value
+        self._event.set()
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._error = exc
+        self._event.set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not served within timeout")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+@dataclasses.dataclass
+class Request:
+    """One submitted query: ``targets`` is an int32 vector of target
+    vertex ids for ``tenant``'s weights; ``t_submit`` is the queue's
+    clock stamp at submission (latency accounting baseline)."""
+
+    targets: np.ndarray
+    tenant: str
+    t_submit: float
+    future: ServeFuture
+    seq: int
+
+    @property
+    def size(self) -> int:
+        return int(self.targets.shape[0])
+
+
+@dataclasses.dataclass
+class QueryBlock:
+    """One padded microbatch: ``idx`` has length ``capacity`` (a ladder
+    capacity), rows ``[:n_valid]`` are real query ids in request order,
+    padded slots repeat a valid id and are discarded. ``requests`` maps
+    each member request to its row slice of the block output."""
+
+    tenant: str
+    idx: np.ndarray
+    requests: List[Tuple[Request, slice]]
+    n_valid: int
+    t_oldest: float
+
+    @property
+    def capacity(self) -> int:
+        return int(self.idx.shape[0])
+
+    @property
+    def padded_slots(self) -> int:
+        return self.capacity - self.n_valid
+
+
+def tune_capacities(
+    batch_sizes: Sequence[int], max_buckets: int = 4
+) -> Tuple[int, ...]:
+    """Capacity ladder from an observed microbatch-size histogram — the
+    degree-bucket autotuner pointed at request batches: minimizes total
+    padded slots over ≤ ``max_buckets`` capacities, so a front-end can
+    re-derive its ladder from production traffic instead of guessing."""
+    return autotune_bucket_sizes(np.asarray(batch_sizes), max_buckets)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    """When to flush, and to what shapes.
+
+    ``capacities`` is the ascending query-block ladder (every block is
+    padded to the tightest member ≥ its request total; the largest entry
+    is the microbatch ceiling). ``flush_timeout`` bounds how long a
+    partial block may wait for more requests (seconds, on the serving
+    clock)."""
+
+    capacities: Tuple[int, ...] = (1, 4, 8, 16)
+    flush_timeout: float = 2e-3
+
+    def __post_init__(self):
+        caps = tuple(int(c) for c in self.capacities)
+        assert caps and all(c > 0 for c in caps), caps
+        assert list(caps) == sorted(set(caps)), f"ascending, unique: {caps}"
+        object.__setattr__(self, "capacities", caps)
+
+    @property
+    def max_batch(self) -> int:
+        return self.capacities[-1]
+
+    def capacity_for(self, n: int) -> int:
+        """Tightest ladder capacity ≥ n (n must fit the ladder)."""
+        assert 0 < n <= self.max_batch, (n, self.capacities)
+        for c in self.capacities:
+            if c >= n:
+                return c
+        raise AssertionError  # pragma: no cover - guarded above
+
+    @classmethod
+    def tuned(
+        cls,
+        batch_sizes: Sequence[int],
+        max_buckets: int = 4,
+        flush_timeout: float = 2e-3,
+    ) -> "BatchPolicy":
+        return cls(tune_capacities(batch_sizes, max_buckets), flush_timeout)
+
+
+class RequestQueue:
+    """Thread-safe FIFO of pending requests with the drain/flush logic.
+
+    ``put`` never blocks (serving backpressure is the block pipe's job,
+    not the queue's); ``drain`` is the ONLY consumer and implements the
+    saturation/timeout/force policy above. ``wait``/``notify`` let a
+    collector thread sleep until work or a deadline arrives without
+    polling."""
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._pending: List[Request] = []
+        self._seq = 0
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._pending)
+
+    @property
+    def version(self) -> int:
+        """Monotonic put counter: a collector snapshots it before
+        draining and waits for it to move (or a deadline/shutdown), so a
+        put landing between drain and wait can never be missed."""
+        return self._seq
+
+    def put(
+        self, targets, tenant: str, now: float, max_batch: int
+    ) -> Request:
+        targets = np.asarray(targets, np.int32).ravel()
+        if targets.size == 0:
+            raise ValueError("empty query: need at least one target id")
+        if targets.size > max_batch:
+            raise ValueError(
+                f"query of {targets.size} targets exceeds the largest "
+                f"block capacity {max_batch}; split it client-side"
+            )
+        with self._cond:
+            req = Request(
+                targets=targets, tenant=tenant, t_submit=float(now),
+                future=ServeFuture(), seq=self._seq,
+            )
+            self._seq += 1
+            self._pending.append(req)
+            self._cond.notify_all()
+        return req
+
+    def wait_for(self, predicate, timeout: Optional[float]) -> None:
+        """Block until ``predicate()`` holds or the timeout elapses. The
+        predicate is (re)checked under the queue lock BEFORE sleeping, so
+        a state change that happened-before this call (a put, a shutdown
+        flag set + ``notify_all``) is seen immediately — no missed
+        wakeups; spurious returns are fine, the collector loops."""
+        with self._cond:
+            self._cond.wait_for(predicate, timeout)
+
+    def notify_all(self) -> None:
+        with self._cond:
+            self._cond.notify_all()
+
+    def next_deadline(self, policy: BatchPolicy) -> Optional[float]:
+        """Clock time at which the oldest pending request times out
+        (None when the queue is empty)."""
+        with self._cond:
+            if not self._pending:
+                return None
+            return min(r.t_submit for r in self._pending) + policy.flush_timeout
+
+    def drain(
+        self, policy: BatchPolicy, now: float, force: bool = False
+    ) -> List[QueryBlock]:
+        """Pack pending requests into emit-ready blocks.
+
+        Per tenant (tenants in first-arrival order, requests FIFO):
+        greedy-pack requests until the next one would overflow
+        ``max_batch``; a block closed by overflow is SATURATED and always
+        emits, the tenant's final partial block emits only when forced or
+        when its oldest member has aged past ``flush_timeout``. Emitted
+        requests leave the queue; everything else stays pending."""
+        with self._cond:
+            by_tenant: "OrderedDict[str, List[Request]]" = OrderedDict()
+            for r in self._pending:
+                by_tenant.setdefault(r.tenant, []).append(r)
+
+            blocks: List[QueryBlock] = []
+            emitted: set = set()
+            for tenant, reqs in by_tenant.items():
+                group: List[Request] = []
+                total = 0
+                for r in reqs + [None]:
+                    if r is not None and total + r.size <= policy.max_batch:
+                        group.append(r)
+                        total += r.size
+                        continue
+                    if group:
+                        # closed by overflow, or exactly full: no more
+                        # batching is possible, emit without waiting
+                        saturated = (
+                            r is not None or total >= policy.max_batch
+                        )
+                        t_old = group[0].t_submit
+                        if (
+                            saturated or force
+                            or now - t_old >= policy.flush_timeout
+                        ):
+                            blocks.append(self._pack(group, total, policy))
+                            emitted.update(g.seq for g in group)
+                    group, total = ([r], r.size) if r is not None else ([], 0)
+            if emitted:
+                self._pending = [
+                    r for r in self._pending if r.seq not in emitted
+                ]
+            return blocks
+
+    @staticmethod
+    def _pack(group: List[Request], total: int, policy: BatchPolicy) -> QueryBlock:
+        cap = policy.capacity_for(total)
+        idx = np.empty(cap, np.int32)
+        requests: List[Tuple[Request, slice]] = []
+        off = 0
+        for r in group:
+            idx[off: off + r.size] = r.targets
+            requests.append((r, slice(off, off + r.size)))
+            off += r.size
+        idx[off:] = idx[0]  # pad with a valid id; rows are discarded
+        return QueryBlock(
+            tenant=group[0].tenant, idx=idx, requests=requests,
+            n_valid=off, t_oldest=group[0].t_submit,
+        )

@@ -1,0 +1,510 @@
+"""Deterministic load-test harness for the ``repro.serve`` front-end.
+
+Everything time- or concurrency-dependent runs on the injectable seam:
+``FakeClock`` (the test owns time; flush timeouts fire because the test
+advances the clock) + ``InlineExecutor`` (the test drives the collector/
+stepper core with ``pump()``) — NO real sleeps, no threads, no flakes.
+One threaded smoke at the end exercises the real collector/stepper pair,
+synchronized purely by futures (events), never by sleeping.
+
+Covers the serving contracts:
+  * queue saturation / capacity bucketing / flush-timeout / FIFO packing
+    (on a fake session, so the policy logic is tested in microseconds);
+  * p50/p99/QPS accounting is an exact function of the fake clock;
+  * seeded microbatch-vs-serial parity sweep: BIT-IDENTICAL to
+    one-at-a-time ``session(params)`` slices for all 3 models ×
+    {fused, fused_kernel}, ragged final blocks included, plus the §4.3
+    small-K pruner-bypass flow;
+  * multi-tenant weight-plane routing (incl. donate_params streaming)
+    through ONE compiled executable;
+  * the never-retrace contract: every served shape comes from the
+    pre-warmed capacity ladder, zero Python NA dispatch / mesh lookups /
+    retraces while serving;
+  * the ``task.logits`` deprecation shim regression (warns exactly once
+    per task, stays bit-identical to ``model.apply``).
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import flows, pipeline
+from repro.core.flows import FlowConfig
+from repro.core.hetgraph import autotune_bucket_sizes
+from repro.kernels.fused_prune_aggregate import kernel as fpa_kernel
+from repro.serve import (
+    BatchPolicy,
+    FakeClock,
+    InlineExecutor,
+    RequestQueue,
+    ServeFrontend,
+    SystemClock,
+    ThreadExecutor,
+    WeightPlane,
+    make_workload,
+    run_serial,
+    run_workload,
+    tune_capacities,
+)
+
+TASKS = [("han", "acm"), ("rgat", "imdb"), ("simple_hgn", "dblp")]
+POLICY = BatchPolicy(capacities=(1, 4, 8), flush_timeout=0.01)
+
+
+def _reset():
+    flows.DISPATCH.update(
+        graph_calls=0, bucket_calls=0, traces=0, sharded_calls=0,
+        mesh_lookups=0, query_calls=0,
+    )
+    fpa_kernel.DISPATCH.update(pallas_calls=0, grouped_traces=0)
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    return {
+        (m, d): pipeline.prepare(m, d, scale=0.04, max_degree=32, seed=0)
+        for m, d in TASKS
+    }
+
+
+@pytest.fixture(scope="module")
+def rgat_sess(tasks):
+    task = tasks[("rgat", "imdb")]
+    sess = task.compile(FlowConfig("fused", prune_k=8))
+    return task, sess, np.asarray(sess(task.params))
+
+
+class FakeSession:
+    """Policy-logic stand-in: ``query`` returns ``scale * table[idx]`` so
+    tenant routing is observable, and records every served capacity so
+    the never-a-new-shape contract is checkable without jax compiles."""
+
+    donate_params = False
+
+    def __init__(self, num_targets=64, num_classes=3):
+        rng = np.random.default_rng(0)
+        self.table = rng.normal(size=(num_targets, num_classes))
+        self.compiled = []
+        self.served = []
+
+    def compile_query(self, capacity):
+        self.compiled.append(int(capacity))
+
+    def query(self, params, idx):
+        idx = np.asarray(idx)
+        assert idx.shape[0] in self.compiled, (idx.shape, self.compiled)
+        self.served.append(idx.shape[0])
+        return float(params["scale"]) * self.table[idx]
+
+
+def _inline(session=None, params=None, policy=POLICY, clock=None):
+    session = session if session is not None else FakeSession()
+    clock = clock if clock is not None else FakeClock()
+    fe = ServeFrontend(
+        session,
+        params if params is not None else {"scale": np.float32(1.0)},
+        policy=policy, clock=clock, executor=InlineExecutor(),
+    )
+    return fe, session, clock
+
+
+# ---------------------------------------------------------------------------
+# capacity ladder / policy
+# ---------------------------------------------------------------------------
+
+
+def test_policy_capacity_for_picks_tightest():
+    p = BatchPolicy(capacities=(1, 4, 8, 16))
+    assert [p.capacity_for(n) for n in (1, 2, 4, 5, 16)] == [1, 4, 4, 8, 16]
+    assert p.max_batch == 16
+    with pytest.raises(AssertionError):
+        p.capacity_for(17)
+
+
+def test_policy_rejects_bad_ladders():
+    with pytest.raises(AssertionError):
+        BatchPolicy(capacities=(8, 4))
+    with pytest.raises(AssertionError):
+        BatchPolicy(capacities=())
+
+
+def test_tune_capacities_is_the_degree_autotuner():
+    """Query-batch bucketing reuses the degree-bucket DP verbatim: same
+    optimizer, pointed at a batch-size histogram."""
+    sizes = [1, 1, 1, 2, 3, 8, 8, 15, 16]
+    assert tune_capacities(sizes, 3) == tuple(
+        autotune_bucket_sizes(np.asarray(sizes), 3)
+    )
+    # the tuned ladder never pays more padded slots than a static one of
+    # the same length
+    def padded(caps):
+        caps = sorted(caps)
+        tot = 0
+        for s in sizes:
+            tot += next(c for c in caps if c >= s) - s
+        return tot
+
+    tuned = tune_capacities(sizes, 3)
+    assert padded(tuned) <= padded((4, 8, 16))
+    p = BatchPolicy.tuned(sizes, 3, flush_timeout=0.5)
+    assert p.capacities == tuned and p.flush_timeout == 0.5
+
+
+# ---------------------------------------------------------------------------
+# queue drain: saturation / timeout / force / FIFO packing
+# ---------------------------------------------------------------------------
+
+
+def test_drain_saturation_emits_full_blocks_immediately():
+    q = RequestQueue()
+    for i in range(5):  # 5 x 3 targets, max_batch 8 -> 2 full, 1 partial
+        q.put(np.arange(3) + 10 * i, "default", now=0.0, max_batch=8)
+    blocks = q.drain(POLICY, now=0.0)  # age 0: only saturated blocks emit
+    assert [b.n_valid for b in blocks] == [6, 6]
+    assert len(q) == 1  # the partial remainder stays pending
+    assert all(b.capacity == 8 for b in blocks)
+
+
+def test_drain_flush_timeout_gates_partial_blocks():
+    q = RequestQueue()
+    q.put([1, 2], "default", now=0.0, max_batch=8)
+    assert q.drain(POLICY, now=0.005) == []  # younger than flush_timeout
+    assert len(q) == 1
+    (blk,) = q.drain(POLICY, now=0.011)  # aged past it
+    assert blk.n_valid == 2 and blk.capacity == 4
+    assert len(q) == 0
+    assert q.next_deadline(POLICY) is None
+
+
+def test_drain_force_flushes_everything():
+    q = RequestQueue()
+    q.put([1], "a", now=0.0, max_batch=8)
+    q.put([2], "b", now=0.0, max_batch=8)
+    assert q.drain(POLICY, now=0.0) == []
+    blocks = q.drain(POLICY, now=0.0, force=True)
+    assert [b.tenant for b in blocks] == ["a", "b"]
+    assert len(q) == 0
+
+
+def test_drain_packs_fifo_never_splits_never_mixes_tenants():
+    q = RequestQueue()
+    r1 = q.put([1, 2, 3, 4, 5], "a", now=0.0, max_batch=8)
+    r2 = q.put([6, 7, 8, 9], "a", now=0.0, max_batch=8)  # 5+4 > 8: splits blocks
+    r3 = q.put([10], "b", now=0.0, max_batch=8)
+    blocks = q.drain(POLICY, now=1.0, force=True)
+    assert [b.tenant for b in blocks] == ["a", "a", "b"]
+    b0, b1, b2 = blocks
+    # r1 whole in block 0 (padded to 8), r2 whole in block 1 — FIFO, unsplit
+    assert b0.requests[0][0] is r1 and b0.n_valid == 5
+    np.testing.assert_array_equal(b0.idx[:5], [1, 2, 3, 4, 5])
+    np.testing.assert_array_equal(b0.idx[5:], [1, 1, 1])  # valid-id padding
+    assert b1.requests[0][0] is r2 and b1.n_valid == 4 and b1.capacity == 4
+    assert b2.requests[0][0] is r3 and b2.capacity == 1
+    # row slices cover exactly the valid prefix, in request order
+    assert [s for _, s in b0.requests] == [slice(0, 5)]
+
+
+def test_put_validates_requests():
+    q = RequestQueue()
+    with pytest.raises(ValueError, match="empty query"):
+        q.put([], "default", now=0.0, max_batch=8)
+    with pytest.raises(ValueError, match="exceeds the largest"):
+        q.put(np.arange(9), "default", now=0.0, max_batch=8)
+
+
+# ---------------------------------------------------------------------------
+# clock / executor seam
+# ---------------------------------------------------------------------------
+
+
+def test_fake_clock_records_and_advances():
+    c = FakeClock(t0=5.0)
+    c.sleep(0.25)
+    c.advance(0.75)
+    assert c.now() == 6.0 and c.sleeps == [0.25]
+
+
+def test_inline_executor_refuses_to_spawn():
+    with pytest.raises(RuntimeError, match="pump"):
+        InlineExecutor().spawn("x", lambda: None)
+
+
+# ---------------------------------------------------------------------------
+# front-end on the fake session: saturation, bucketing, timeout, stats
+# ---------------------------------------------------------------------------
+
+
+def test_frontend_prewarms_whole_ladder():
+    fe, sess, _ = _inline()
+    assert sorted(sess.compiled) == list(POLICY.capacities)
+
+
+def test_frontend_saturation_microbatches():
+    """A burst bigger than max_batch is served as full blocks with no
+    timeout wait — and every served shape is a ladder capacity."""
+    fe, sess, clock = _inline()
+    futs = [fe.submit([i, i + 1]) for i in range(0, 20, 2)]  # 10 x 2 targets
+    n_blocks = fe.pump()  # age 0: saturated blocks only
+    assert n_blocks == 2 and sess.served == [8, 8]
+    assert sum(f.done() for f in futs) == 8
+    clock.advance(POLICY.flush_timeout)
+    assert fe.pump() == 1  # the aged remainder (4 targets -> capacity 4)
+    assert sess.served == [8, 8, 4]
+    assert all(f.done() for f in futs)
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(
+            f.result(0), sess.table[[2 * i, 2 * i + 1]]
+        )
+    assert set(sess.served) <= set(POLICY.capacities)  # never a new shape
+
+
+def test_frontend_flush_timeout_on_fake_clock():
+    fe, sess, clock = _inline()
+    f = fe.submit([3])
+    assert fe.pump() == 0 and not f.done()  # under-filled, under-aged
+    clock.advance(0.009)
+    assert fe.pump() == 0  # still short of the deadline
+    clock.advance(0.002)
+    assert fe.pump() == 1 and f.done()
+    np.testing.assert_array_equal(f.result(0), sess.table[[3]])
+
+
+def test_frontend_latency_accounting_is_exact():
+    """p50/p99/QPS are exact functions of the fake clock: requests
+    submitted at t=0,1,2,3 all complete at t=10 -> latencies 10,9,8,7."""
+    fe, _, clock = _inline()
+    for i in range(4):
+        clock.advance(0.0 if i == 0 else 1.0)
+        fe.submit([i, i + 1])  # 4 x 2 = 8 targets: exactly one full block
+    clock.advance(7.0)  # completion at t=10
+    assert fe.pump() == 1
+    s = fe.stats
+    assert sorted(s.latencies) == [7.0, 8.0, 9.0, 10.0]
+    assert s.percentile(50) == 8.5
+    assert s.percentile(99) == pytest.approx(10.0 - 0.03)
+    assert s.qps() == pytest.approx(4 / 10.0)  # 4 done over [0, 10]
+    assert s.summary()["mean_batch"] == 8.0
+    assert s.summary()["pad_fraction"] == 0.0
+
+
+def test_frontend_multi_tenant_routing_fake():
+    fe, sess, clock = _inline()
+    fe.plane.publish("b", {"scale": np.float32(2.0)})
+    fa = fe.submit([1, 2], tenant="default")
+    fb = fe.submit([1, 2], tenant="b")
+    clock.advance(1.0)
+    assert fe.pump() == 2  # one block per tenant, never mixed
+    np.testing.assert_array_equal(fa.result(0), sess.table[[1, 2]])
+    np.testing.assert_array_equal(fb.result(0), 2.0 * sess.table[[1, 2]])
+    with pytest.raises(KeyError, match="unknown tenant"):
+        fe.submit([1], tenant="nope")
+
+
+def test_workload_generator_is_seeded():
+    a = make_workload(16, 50, rate=100.0, tenants=("x", "y"), seed=7)
+    b = make_workload(16, 50, rate=100.0, tenants=("x", "y"), seed=7)
+    assert len(a) == 16
+    for wa, wb in zip(a, b):
+        assert wa.t_offset == wb.t_offset and wa.tenant == wb.tenant
+        np.testing.assert_array_equal(wa.targets, wb.targets)
+    assert any(w.tenant == "x" for w in a) and any(w.tenant == "y" for w in a)
+    offs = [w.t_offset for w in a]
+    assert offs == sorted(offs) and offs[-1] > 0
+
+
+def test_paced_workload_on_fake_clock_is_deterministic():
+    """An open-loop paced replay through the inline front-end: arrival
+    pacing rides clock.sleep (instant on FakeClock), flush timeouts fire
+    exactly when the virtual clock crosses them — same seed, same stats,
+    down to the block sequence."""
+
+    def once():
+        fe, sess, clock = _inline()
+        wl = make_workload(12, 64, rate=200.0, size_range=(1, 3), seed=11)
+        futs = run_workload(fe, wl)
+        assert all(f.done() for f in futs)
+        return sess.served, fe.stats.latencies, fe.stats.qps()
+
+    assert once() == once()
+
+
+# ---------------------------------------------------------------------------
+# real sessions: microbatch == serial == full-forward slices, bit-exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model,dataset", TASKS)
+@pytest.mark.parametrize(
+    "flow",
+    [
+        FlowConfig("fused", prune_k=8),
+        FlowConfig("fused_kernel", prune_k=8),
+        # prune_k >= every bucket capacity (max_degree=32): the §4.3
+        # small-K bypass path serves the whole graph pruner-free
+        FlowConfig("fused", prune_k=64),
+    ],
+    ids=("fused", "fused_kernel", "fused_bypass"),
+)
+def test_microbatch_parity_sweep(tasks, model, dataset, flow):
+    """Microbatched query blocks are bit-identical to one-at-a-time
+    serial slices AND to full-forward slices, ragged final block
+    included (workload sizes chosen so the last block is partial)."""
+    task = tasks[(model, dataset)]
+    sess = task.compile(flow)
+    full = np.asarray(sess(task.params))
+    fe, _, clock = _inline(session=sess, params=task.params)
+    wl = make_workload(
+        13, task.batch.num_targets, size_range=(1, 3), seed=3
+    )  # odd count + odd sizes: the final flush block is ragged
+    futs = run_workload(fe, wl)
+    for w, f in zip(wl, futs):
+        # the serial oracle IS session(params) sliced at the request ids
+        np.testing.assert_array_equal(f.result(0), full[w.targets])
+    if flow.flow == "fused":  # the per-request dispatch baseline too
+        serial, _ = run_serial(sess, task.params, wl, POLICY, FakeClock())
+        for f, s in zip(futs, serial):
+            np.testing.assert_array_equal(f.result(0), s)
+    assert fe.stats.blocks < len(wl)  # it actually microbatched
+    assert fe.stats.completed == len(wl)
+
+
+def test_serving_zero_python_dispatch(rgat_sess):
+    """Steady-state serving never re-enters Python NA dispatch: no
+    run_aggregate_graph entries, no mesh lookups, no retraces — and the
+    query-call counter shows the amortization (blocks, not requests)."""
+    task, sess, _ = rgat_sess
+    fe, _, clock = _inline(session=sess, params=task.params)
+    wl = make_workload(16, task.batch.num_targets, size_range=(2, 2), seed=5)
+    run_workload(fe, wl)  # warm every capacity the workload hits
+    blocks_before = fe.stats.blocks
+    _reset()
+    wl2 = make_workload(16, task.batch.num_targets, size_range=(2, 2), seed=6)
+    run_workload(fe, wl2)
+    assert flows.DISPATCH["graph_calls"] == 0
+    assert flows.DISPATCH["mesh_lookups"] == 0
+    assert flows.DISPATCH["traces"] == 0
+    assert fpa_kernel.DISPATCH["grouped_traces"] == 0
+    assert flows.DISPATCH["query_calls"] == fe.stats.blocks - blocks_before
+    assert flows.DISPATCH["query_calls"] < len(wl2)
+
+
+def test_query_entry_matches_full_forward(rgat_sess):
+    task, sess, full = rgat_sess
+    idx = np.array([5, 0, 5, 2], np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(sess.query(task.params, idx)), full[idx]
+    )
+    assert 4 in sess.query_capacities
+    with pytest.raises(ValueError, match="1-D"):
+        sess.query(task.params, np.zeros((2, 2), np.int32))
+
+
+def test_multi_tenant_streaming_real(rgat_sess, tasks):
+    """Two param versions through ONE donate_params executable: each
+    tenant's rows match its own full forward, bit for bit."""
+    task, sess, full_init = rgat_sess
+    trained = pipeline.train_hgnn(task, steps=3, lr=5e-3)
+    full_trained = np.asarray(sess(trained))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # CPU: donation unimplemented note
+        sess_d = task.compile(
+            FlowConfig("fused", prune_k=8), donate_params=True
+        )
+        plane = WeightPlane(task.params, stream=True)
+        plane.publish("init", task.params)
+        plane.publish("trained", trained)
+        fe, _, clock = _inline(session=sess_d, params=plane)
+        wl = make_workload(
+            12, task.batch.num_targets, tenants=("init", "trained"), seed=9
+        )
+        futs = run_workload(fe, wl)
+    ref = {"init": full_init, "trained": full_trained}
+    for w, f in zip(wl, futs):
+        np.testing.assert_array_equal(f.result(0), ref[w.tenant][w.targets])
+    # blocks are single-tenant even though the executable is shared
+    assert len(fe.session.query_capacities) <= len(POLICY.capacities)
+
+
+def test_plane_rejects_incompatible_params(rgat_sess):
+    task, _, _ = rgat_sess
+    plane = WeightPlane(task.params)
+    bad = jax.tree_util.tree_map(
+        lambda l: np.zeros(np.shape(l) + (1,), np.asarray(l).dtype),
+        task.params,
+    )
+    with pytest.raises(ValueError, match="aval-compatible"):
+        plane.publish("bad", bad)
+    with pytest.raises(KeyError, match="unknown tenant"):
+        plane.checkout("missing")
+
+
+def test_donate_session_requires_streaming_plane(rgat_sess, tasks):
+    task, _, _ = rgat_sess
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        sess_d = task.compile(FlowConfig("fused", prune_k=8), donate_params=True)
+        plane = WeightPlane(task.params, stream=False)
+        plane.publish("default", task.params)
+        with pytest.raises(ValueError, match="stream=True"):
+            ServeFrontend(
+                sess_d, plane, policy=POLICY, clock=FakeClock(),
+                executor=InlineExecutor(),
+            )
+
+
+def test_threaded_frontend_smoke(rgat_sess):
+    """The real collector/stepper pair, synchronized only by futures and
+    condition variables (no polling sleeps in the test): every request
+    completes with bit-exact rows."""
+    task, sess, full = rgat_sess
+    policy = BatchPolicy(capacities=(1, 4, 8), flush_timeout=2e-3)
+    with ServeFrontend(
+        sess, task.params, policy=policy, clock=SystemClock(),
+        executor=ThreadExecutor(),
+    ) as fe:
+        wl = make_workload(
+            24, task.batch.num_targets, size_range=(1, 3), seed=4
+        )
+        futs = run_workload(fe, wl)
+        for w, f in zip(wl, futs):
+            np.testing.assert_array_equal(f.result(30), full[w.targets])
+        assert fe.stats.completed == 24
+    # close() stopped both loops
+    for t in fe.executor.threads:
+        assert not t.is_alive()
+    with pytest.raises(RuntimeError, match="closed"):
+        fe.submit([1])
+
+
+# ---------------------------------------------------------------------------
+# task.logits deprecation shim regression
+# ---------------------------------------------------------------------------
+
+
+def test_logits_shim_warns_once_and_stays_bit_identical():
+    """The deprecated serving entry: exactly ONE DeprecationWarning per
+    task however many calls, and bit-identical to model.apply — per
+    flow."""
+    task = pipeline.prepare("rgat", "imdb", scale=0.03, max_degree=32, seed=0)
+    flow = FlowConfig("fused", prune_k=8)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        a = np.asarray(task.logits(task.params, flow))
+        b = np.asarray(task.logits(task.params))
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1 and "task.compile" in str(deps[0].message)
+    np.testing.assert_array_equal(
+        a, np.asarray(task.model.apply(task.params, task.batch, flow))
+    )
+    np.testing.assert_array_equal(
+        b, np.asarray(task.model.apply(task.params, task.batch, FlowConfig()))
+    )
+    # a second task gets its own single warning (per-task, not global)
+    task2 = pipeline.prepare("rgat", "imdb", scale=0.03, max_degree=32, seed=1)
+    with warnings.catch_warnings(record=True) as rec2:
+        warnings.simplefilter("always")
+        task2.logits(task2.params)
+    assert sum(
+        issubclass(w.category, DeprecationWarning) for w in rec2
+    ) == 1
