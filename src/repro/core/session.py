@@ -177,6 +177,26 @@ class InferenceSession:
         flows.DISPATCH["query_calls"] += 1
         return gather(out, idx)
 
+    def prewarm(self, capacities: Sequence[int]) -> "InferenceSession":
+        """Pre-compile the gather ladder for every capacity in one shot.
+
+        This is the FALLBACK-FLOW pre-compilation hook: a fault-tolerant
+        front-end (``repro.serve.ServeFrontend(fallback=...)``) prewarms
+        both its primary and its degradation session at construction, so
+        a circuit-breaker trip mid-incident swaps executables — it never
+        compiles anything. Returns self for chaining
+        (``task.compile(fallback_flow).prewarm(policy.capacities)``)."""
+        for cap in capacities:
+            self.compile_query(cap)
+        return self
+
+    @property
+    def out_shape(self) -> Tuple[int, ...]:
+        """Forward-output shape ``(num_targets, num_classes)`` — the
+        compatibility contract a fallback session must share with the
+        primary (same targets, same classes) to serve its query blocks."""
+        return tuple(self._out_aval.shape)
+
     @property
     def query_capacities(self) -> Tuple[int, ...]:
         """Capacities with a compiled gather program, ascending."""

@@ -4,7 +4,10 @@ The request-scale layer: concurrent target-vertex queries are collected
 into padded capacity-bucketed query blocks (one AOT executable per
 capacity — never retraces), stepped through a double-buffered
 collector/stepper loop, and routed across tenant weight versions sharing
-ONE compiled executable. See ``src/repro/serve/README.md``.
+ONE compiled executable. Fault-tolerant by contract: bounded admission,
+per-request deadlines, a supervised stepper with retry + circuit-breaker
+degradation to a pre-compiled fallback flow, and a deterministic
+fault-injection seam (``FaultPlan``). See ``src/repro/serve/README.md``.
 """
 from repro.serve.clock import (
     Clock,
@@ -13,7 +16,21 @@ from repro.serve.clock import (
     SystemClock,
     ThreadExecutor,
 )
+from repro.serve.faults import FaultContext, FaultPlan, FaultRule
 from repro.serve.frontend import ServeFrontend, ServeStats
+from repro.serve.health import (
+    CircuitBreaker,
+    DeadlineExceededError,
+    FlushTimeout,
+    HealthReport,
+    QueueFullError,
+    ServeClosedError,
+    ServeError,
+    StepperDiedError,
+    SupervisorPolicy,
+    TenantUnpublishedError,
+    TransientDispatchError,
+)
 from repro.serve.load import Workload, make_workload, run_serial, run_workload
 from repro.serve.plane import WeightPlane, param_avals
 from repro.serve.queueing import (
@@ -27,17 +44,31 @@ from repro.serve.queueing import (
 
 __all__ = [
     "BatchPolicy",
+    "CircuitBreaker",
     "Clock",
+    "DeadlineExceededError",
     "FakeClock",
+    "FaultContext",
+    "FaultPlan",
+    "FaultRule",
+    "FlushTimeout",
+    "HealthReport",
     "InlineExecutor",
     "QueryBlock",
+    "QueueFullError",
     "Request",
     "RequestQueue",
+    "ServeClosedError",
+    "ServeError",
     "ServeFrontend",
     "ServeFuture",
     "ServeStats",
+    "StepperDiedError",
+    "SupervisorPolicy",
     "SystemClock",
+    "TenantUnpublishedError",
     "ThreadExecutor",
+    "TransientDispatchError",
     "WeightPlane",
     "Workload",
     "make_workload",

@@ -74,20 +74,34 @@ class InlineExecutor:
             "with pump()/flush() instead"
         )
 
+    def liveness(self) -> dict:
+        """No loops to be alive; the caller is the loop."""
+        return {}
+
 
 class ThreadExecutor:
-    """Daemon threads, tracked for join-on-close."""
+    """Daemon threads, tracked by name for join-on-close and liveness
+    reporting (``ServeFrontend.health()`` reads ``alive``)."""
 
     threaded = True
 
     def __init__(self):
         self.threads: List[threading.Thread] = []
+        self._by_name: dict = {}
 
     def spawn(self, name: str, fn: Callable[[], None]) -> threading.Thread:
         t = threading.Thread(target=fn, name=name, daemon=True)
         t.start()
         self.threads.append(t)
+        self._by_name[name] = t
         return t
+
+    def alive(self, name: str) -> bool:
+        t = self._by_name.get(name)
+        return bool(t is not None and t.is_alive())
+
+    def liveness(self) -> dict:
+        return {n: t.is_alive() for n, t in self._by_name.items()}
 
     def join(self, timeout: float = 10.0) -> None:
         for t in self.threads:

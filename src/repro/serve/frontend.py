@@ -21,6 +21,34 @@ Every block capacity in the policy ladder is AOT-compiled at construction
 (``session.compile_query``), so serving never retraces — a new shape is
 impossible by construction. Tenant routing happens at block granularity:
 each block runs under the weights ``WeightPlane.checkout(tenant)`` returns.
+
+FAULT TOLERANCE (the supervised serving contract — no future is EVER
+stranded; every one resolves with a result or a typed error from
+``repro.serve.health``):
+
+  * ADMISSION — ``BatchPolicy.max_pending`` bounds the queue; an over-
+    bound ``submit`` sheds fast with ``QueueFullError``. Per-request
+    deadlines (``submit(timeout=...)``) expire stale work AT DRAIN TIME
+    with ``DeadlineExceededError`` — a dead request never costs a
+    forward.
+  * SUPERVISION — both loops run under a supervisor: an exception while
+    serving a block fails ONLY that block's futures and the loop keeps
+    serving; a poisoned drain is caught and retried; a loop escaping its
+    supervisor entirely (a bug) fails every outstanding future with
+    ``StepperDiedError`` rather than stranding them.
+  * RETRY + DEGRADATION — transient dispatch failures retry with capped
+    exponential backoff on the injected clock
+    (:class:`~repro.serve.health.SupervisorPolicy`); a block whose
+    primary flow still fails is served by the pre-compiled FALLBACK
+    session (ADE-HGNN's §6 accuracy budget licenses the cheaper flow),
+    and ``breaker_threshold`` consecutive primary failures trip a
+    circuit breaker that routes blocks straight to the fallback until a
+    cooldown-gated half-open probe recovers. ``health()`` exposes
+    liveness / breaker / queue-depth state.
+  * INJECTION — an optional :class:`~repro.serve.faults.FaultPlan` fires
+    at the checkout / dispatch / drain seams, so every failure mode
+    above is deterministically testable on ``FakeClock`` +
+    ``InlineExecutor`` with zero real sleeps (``benchmarks/serve_chaos``).
 """
 from __future__ import annotations
 
@@ -32,6 +60,18 @@ import jax
 import numpy as np
 
 from repro.serve.clock import Clock, InlineExecutor, SystemClock, ThreadExecutor
+from repro.serve.faults import FaultContext, FaultPlan
+from repro.serve.health import (
+    CircuitBreaker,
+    DeadlineExceededError,
+    FlushTimeout,
+    HealthReport,
+    QueueFullError,
+    ServeClosedError,
+    StepperDiedError,
+    SupervisorPolicy,
+    TenantUnpublishedError,
+)
 from repro.serve.plane import WeightPlane
 from repro.serve.queueing import (
     BatchPolicy,
@@ -43,7 +83,12 @@ from repro.serve.queueing import (
 
 class ServeStats:
     """Serving accounting on the injected clock — with a ``FakeClock``
-    every quantity below is exactly computable by the test."""
+    every quantity below is exactly computable by the test. ``completed``
+    counts successfully served requests; ``shed``/``expired``/``failed``
+    partition every request that resolved with a typed error instead."""
+
+    _QPS_EPS = 1e-6  # minimum accounting window (s): fake-clock bursts
+    # can complete everything on the submit instant
 
     def __init__(self):
         self._lock = threading.Lock()
@@ -56,6 +101,13 @@ class ServeStats:
         self.padded_slots = 0
         self.t_first_submit: Optional[float] = None
         self.t_last_done: Optional[float] = None
+        # robustness accounting
+        self.shed = 0             # admission-control rejections
+        self.expired = 0          # deadline expiries at drain
+        self.failed = 0           # requests failed by a serving error
+        self.failed_blocks = 0
+        self.retries = 0          # transient-dispatch re-attempts
+        self.fallback_blocks = 0  # blocks served degraded
 
     def on_submit(self, now: float) -> None:
         with self._lock:
@@ -63,16 +115,35 @@ class ServeStats:
             if self.t_first_submit is None:
                 self.t_first_submit = now
 
-    def on_block(self, blk: QueryBlock, now: float) -> None:
+    def on_block(self, blk: QueryBlock, now: float, engine: str = "primary") -> None:
         with self._lock:
             self.blocks += 1
             self.block_sizes.append(blk.n_valid)
             self.valid_slots += blk.n_valid
             self.padded_slots += blk.padded_slots
             self.completed += len(blk.requests)
+            if engine == "fallback":
+                self.fallback_blocks += 1
             for req, _ in blk.requests:
                 self.latencies.append(now - req.t_submit)
             self.t_last_done = now
+
+    def on_shed(self, now: float) -> None:
+        with self._lock:
+            self.shed += 1
+
+    def on_expired(self, req) -> None:
+        with self._lock:
+            self.expired += 1
+
+    def on_retry(self) -> None:
+        with self._lock:
+            self.retries += 1
+
+    def on_failed_block(self, blk: QueryBlock, now: float) -> None:
+        with self._lock:
+            self.failed_blocks += 1
+            self.failed += len(blk.requests)
 
     def percentile(self, q: float) -> float:
         with self._lock:
@@ -86,13 +157,17 @@ class ServeStats:
         return self.padded_slots / tot if tot else 0.0
 
     def qps(self) -> float:
-        """Completed requests over the submit→last-completion window."""
+        """Completed requests over the submit→last-completion window,
+        floored at ``_QPS_EPS`` — on a ``FakeClock`` an entire burst can
+        complete on the submit instant, and a zero-width window must
+        read as "very fast", not NaN."""
         if (
-            self.t_first_submit is None or self.t_last_done is None
-            or self.t_last_done <= self.t_first_submit
+            self.completed == 0
+            or self.t_first_submit is None or self.t_last_done is None
         ):
             return float("nan")
-        return self.completed / (self.t_last_done - self.t_first_submit)
+        window = max(self.t_last_done - self.t_first_submit, self._QPS_EPS)
+        return self.completed / window
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -105,6 +180,11 @@ class ServeStats:
                 float(np.mean(self.block_sizes)) if self.block_sizes else 0.0
             ),
             "pad_fraction": self.pad_fraction,
+            "shed": self.shed,
+            "expired": self.expired,
+            "failed": self.failed,
+            "retries": self.retries,
+            "fallback_blocks": self.fallback_blocks,
         }
 
 
@@ -115,6 +195,13 @@ class ServeFrontend:
     tree (wrapped as the single ``"default"`` tenant). With a threaded
     executor call ``start()`` (or use the context manager) before
     submitting; with ``InlineExecutor`` just ``submit`` + ``pump``.
+
+    ``fallback`` is an optional second session (same model/batch, a
+    cheaper pre-compiled flow) serving degraded blocks when the primary
+    fails — its whole capacity ladder is prewarmed here, at construction,
+    so a breaker trip mid-incident never compiles. ``supervisor``
+    configures retry/backoff/breaker; ``faults`` threads a
+    :class:`FaultPlan` through the checkout/dispatch/drain seams.
     """
 
     _PIPE_DEPTH = 2  # double buffer: one block in flight, one staged
@@ -126,6 +213,9 @@ class ServeFrontend:
         policy: BatchPolicy = BatchPolicy(),
         clock: Optional[Clock] = None,
         executor=None,
+        fallback=None,
+        supervisor: Optional[SupervisorPolicy] = None,
+        faults: Optional[FaultPlan] = None,
     ):
         if not isinstance(plane, WeightPlane):
             params = plane
@@ -141,25 +231,52 @@ class ServeFrontend:
         self.policy = policy
         self.clock = clock if clock is not None else SystemClock()
         self.executor = executor if executor is not None else ThreadExecutor()
+        self.supervisor = supervisor if supervisor is not None else SupervisorPolicy()
+        self.faults = faults
+        self.fallback = fallback
+        self.breaker = CircuitBreaker(self.supervisor, self.clock)
         self.stats = ServeStats()
-        self.queue = RequestQueue()
-        # pre-warm the whole ladder: serving can never meet a new shape
-        for cap in policy.capacities:
-            session.compile_query(cap)
+        self.queue = RequestQueue(maxsize=policy.max_pending)
+        if fallback is not None:
+            p_shape = getattr(session, "out_shape", None)
+            f_shape = getattr(fallback, "out_shape", None)
+            if p_shape is not None and f_shape is not None and p_shape != f_shape:
+                raise ValueError(
+                    f"fallback session output {f_shape} is not compatible "
+                    f"with the primary's {p_shape}: a degraded block must "
+                    f"serve the same (num_targets, num_classes) table"
+                )
+        # pre-warm the whole ladder — PRIMARY AND FALLBACK: serving can
+        # never meet a new shape, and a breaker trip never compiles
+        for sess in (session, fallback):
+            if sess is None:
+                continue
+            for cap in policy.capacities:
+                sess.compile_query(cap)
 
         self._pipe: "_queue.Queue[Optional[QueryBlock]]" = _queue.Queue(
             maxsize=self._PIPE_DEPTH
         )
-        self._inflight = None  # (block, device_out) staged by the stepper
+        self._inflight = None  # (block, device_out, engine) staged by stepper
         self._outstanding: set = set()
         self._outstanding_lock = threading.Lock()
         self._stop = threading.Event()
         self._started = False
         self._closed = False
+        self._collector_errors = 0
+        self._stepper_errors = 0
+        self._last_error: Optional[BaseException] = None
 
     # -- request side ------------------------------------------------------
-    def submit(self, targets, tenant: str = "default") -> ServeFuture:
-        """Enqueue one query; returns its future. Never blocks."""
+    def submit(
+        self, targets, tenant: str = "default",
+        timeout: Optional[float] = None,
+    ) -> ServeFuture:
+        """Enqueue one query; returns its future. Never blocks: when the
+        queue is at ``policy.max_pending`` it sheds with
+        ``QueueFullError`` instead. ``timeout`` (seconds on the serving
+        clock) sets the request's deadline — expired-in-queue requests
+        fail with ``DeadlineExceededError`` at drain time."""
         if self._closed:
             raise RuntimeError("front-end is closed")
         if tenant not in self.plane:
@@ -167,44 +284,153 @@ class ServeFrontend:
                 f"unknown tenant {tenant!r}; published: {self.plane.tenants()}"
             )
         now = self.clock.now()
-        req = self.queue.put(targets, tenant, now, self.policy.max_batch)
+        deadline = None
+        if timeout is not None:
+            timeout = float(timeout)
+            if timeout <= 0:
+                raise ValueError(f"deadline timeout must be > 0, got {timeout}")
+            deadline = now + timeout
+        try:
+            req = self.queue.put(
+                targets, tenant, now, self.policy.max_batch, deadline=deadline
+            )
+        except QueueFullError:
+            self.stats.on_shed(now)
+            raise
         with self._outstanding_lock:
             self._outstanding.add(req.future)
         self.stats.on_submit(now)
         return req.future
 
     # -- the drain → dispatch → resolve core (both modes share it) ---------
-    def _dispatch(self, blk: QueryBlock):
+    def _ctx(self, site: str, **kw) -> FaultContext:
+        return FaultContext(site=site, clock=self.clock, frontend=self, **kw)
+
+    def _raw_dispatch(self, blk: QueryBlock, session, engine: str):
+        if self.faults is not None:
+            self.faults.fire("checkout", self._ctx(
+                "checkout", tenant=blk.tenant, block=blk, engine=engine,
+            ))
         params = self.plane.checkout(blk.tenant)
-        return self.session.query(params, blk.idx)
+        if self.faults is not None:
+            self.faults.fire("dispatch", self._ctx(
+                "dispatch", tenant=blk.tenant, block=blk, engine=engine,
+            ))
+        return session.query(params, blk.idx)
+
+    def _dispatch_with_retry(self, blk: QueryBlock, session, engine: str):
+        """Dispatch with capped exponential backoff on the injected clock
+        for ``supervisor.retryable`` exceptions; anything else (including
+        ``TenantUnpublishedError``) propagates immediately."""
+        attempt = 0
+        while True:
+            try:
+                return self._raw_dispatch(blk, session, engine)
+            except self.supervisor.retryable:
+                if attempt >= self.supervisor.max_retries:
+                    raise
+                self.stats.on_retry()
+                self.clock.sleep(self.supervisor.backoff(attempt))
+                attempt += 1
+
+    def _supervised_dispatch(self, blk: QueryBlock):
+        """Serve one block under the supervisor: primary (breaker
+        permitting, with retries) → fallback → typed failure. Returns
+        ``(device_out, engine)`` or None when the block's futures were
+        failed here. NEVER raises for a per-block serving failure."""
+        primary_allowed = self.fallback is None or self.breaker.allow_primary()
+        primary_exc: Optional[BaseException] = None
+        if primary_allowed:
+            try:
+                out = self._dispatch_with_retry(blk, self.session, "primary")
+            except TenantUnpublishedError as exc:
+                # the tenant is gone, not the flow: fail this block only,
+                # never count it against the breaker
+                self._fail_block(blk, exc)
+                return None
+            except Exception as exc:  # noqa: BLE001 - supervisor boundary
+                primary_exc = exc
+                self.breaker.record_failure()
+            else:
+                self.breaker.record_success()
+                return out, "primary"
+        if self.fallback is None:
+            self._fail_block(blk, primary_exc)
+            return None
+        try:
+            out = self._dispatch_with_retry(blk, self.fallback, "fallback")
+        except Exception as exc:  # noqa: BLE001 - supervisor boundary
+            self._fail_block(blk, exc if primary_exc is None else primary_exc)
+            return None
+        return out, "fallback"
+
+    def _fail_block(self, blk: QueryBlock, exc: BaseException) -> None:
+        """Complete every future of ``blk`` with ``exc`` (idempotently)
+        — the per-block blast radius the supervisor guarantees."""
+        self._last_error = exc
+        self.stats.on_failed_block(blk, self.clock.now())
+        with self._outstanding_lock:
+            for req, _ in blk.requests:
+                self._outstanding.discard(req.future)
+        for req, _ in blk.requests:
+            req.future.set_exception(exc)
+
+    def _on_expired(self, req) -> None:
+        """Drain-time deadline expiry: typed error + accounting."""
+        self.stats.on_expired(req)
+        with self._outstanding_lock:
+            self._outstanding.discard(req.future)
+        req.future.set_exception(DeadlineExceededError(
+            f"request expired in queue: deadline {req.deadline:.6f} <= "
+            f"drain time {self.clock.now():.6f} "
+            f"(submitted {req.t_submit:.6f})"
+        ))
+
+    def _drain_safe(self, force: bool) -> List[QueryBlock]:
+        """The collector's drain under supervision: a poisoned drain
+        (injected or real) is caught and counted, the requests stay
+        pending, and the next iteration retries — the collector never
+        dies on one bad drain."""
+        try:
+            if self.faults is not None:
+                self.faults.fire("drain", self._ctx("drain"))
+            return self.queue.drain(
+                self.policy, self.clock.now(), force=force,
+                on_expired=self._on_expired,
+            )
+        except Exception as exc:  # noqa: BLE001 - supervisor boundary
+            self._collector_errors += 1
+            self._last_error = exc
+            return []
 
     def _resolve(self, staged) -> None:
         if staged is None:
             return
-        blk, out = staged
+        blk, out, engine = staged
         try:
             rows = np.asarray(jax.block_until_ready(out))
-        except Exception as exc:  # pragma: no cover - device failure path
-            rows, error = None, exc
-        else:
-            error = None
+        except Exception as exc:  # device failure surfaces at the sync
+            self._fail_block(blk, exc)
+            return
         # account BEFORE completing futures: a flush() waiting on the last
         # future must observe final stats the moment it unblocks
-        self.stats.on_block(blk, self.clock.now())
+        self.stats.on_block(blk, self.clock.now(), engine)
         with self._outstanding_lock:
             for req, _ in blk.requests:
                 self._outstanding.discard(req.future)
         for req, slc in blk.requests:
-            if error is not None:
-                req.future.set_exception(error)
-            else:
-                req.future.set_result(rows[slc])
+            req.future.set_result(rows[slc], via=engine)
 
     def _step(self, blk: QueryBlock) -> None:
         """Double-buffered step: dispatch this block, then resolve the
-        PREVIOUS one — its device work overlapped this dispatch."""
-        out = self._dispatch(blk)
-        prev, self._inflight = self._inflight, (blk, out)
+        PREVIOUS one — its device work overlapped this dispatch. A block
+        whose dispatch failed was already resolved (with an error) by the
+        supervisor; the staged block stays staged."""
+        res = self._supervised_dispatch(blk)
+        if res is None:
+            return
+        out, engine = res
+        prev, self._inflight = self._inflight, (blk, out, engine)
         self._resolve(prev)
 
     def _drain_inflight(self) -> None:
@@ -218,9 +444,16 @@ class ServeFrontend:
         each through the double-buffered window, resolve the tail.
         Returns the number of blocks executed."""
         assert not self.executor.threaded, "pump() is for inline mode"
-        blocks = self.queue.drain(self.policy, self.clock.now(), force=force)
+        return self._pump_core(force)
+
+    def _pump_core(self, force: bool = False) -> int:
+        blocks = self._drain_safe(force)
         for blk in blocks:
-            self._step(blk)
+            try:
+                self._step(blk)
+            except Exception as exc:  # noqa: BLE001 - supervisor boundary
+                self._stepper_errors += 1
+                self._fail_block(blk, exc)
         self._drain_inflight()
         return len(blocks)
 
@@ -228,17 +461,37 @@ class ServeFrontend:
     def start(self) -> "ServeFrontend":
         if self.executor.threaded and not self._started:
             self._started = True
-            self.executor.spawn("serve-collector", self._collect_loop)
-            self.executor.spawn("serve-stepper", self._step_loop)
+            self.executor.spawn(
+                "serve-collector", lambda: self._guard_loop(self._collect_loop)
+            )
+            self.executor.spawn(
+                "serve-stepper", lambda: self._guard_loop(self._step_loop)
+            )
         return self
+
+    def _guard_loop(self, loop) -> None:
+        """Last-ditch supervision: a loop escaping its own handlers is a
+        bug, but even then no future may be stranded — fail everything
+        outstanding with ``StepperDiedError`` before the thread dies."""
+        try:
+            loop()
+        except BaseException as exc:  # noqa: BLE001 - terminal boundary
+            self._last_error = exc
+            with self._outstanding_lock:
+                victims = list(self._outstanding)
+                self._outstanding.clear()
+            died = StepperDiedError(
+                f"serving loop died: {type(exc).__name__}: {exc}"
+            )
+            for fut in victims:
+                fut.set_exception(died)
+            raise
 
     def _collect_loop(self) -> None:
         while True:
             stopping = self._stop.is_set()
             seen = self.queue.version  # snapshot BEFORE draining
-            blocks = self.queue.drain(
-                self.policy, self.clock.now(), force=stopping
-            )
+            blocks = self._drain_safe(force=stopping)
             for blk in blocks:
                 self._pipe.put(blk)  # bounded: backpressure to the queue
             if stopping and len(self.queue) == 0:
@@ -261,7 +514,11 @@ class ServeFrontend:
                 if blk is None:
                     self._drain_inflight()
                     return
-                self._step(blk)
+                try:
+                    self._step(blk)
+                except Exception as exc:  # noqa: BLE001 - supervisor
+                    self._stepper_errors += 1
+                    self._fail_block(blk, exc)
                 # keep the window full while blocks are back-to-back; the
                 # moment the pipe runs dry, resolve the staged block
                 # instead of parking it until the next burst
@@ -271,31 +528,106 @@ class ServeFrontend:
                     self._drain_inflight()
                     break
 
+    # -- observability -----------------------------------------------------
+    def health(self) -> HealthReport:
+        """One consistent liveness/breaker/queue-depth snapshot — the
+        state a load balancer or readiness probe reads."""
+        threaded = self.executor.threaded
+        if threaded and self._started:
+            collector = self.executor.alive("serve-collector")
+            stepper = self.executor.alive("serve-stepper")
+        else:
+            collector = stepper = not threaded and not self._closed
+        with self._outstanding_lock:
+            outstanding = len(self._outstanding)
+        return HealthReport(
+            mode="threaded" if threaded else "inline",
+            closed=self._closed,
+            started=self._started,
+            collector_alive=bool(collector),
+            stepper_alive=bool(stepper),
+            queue_depth=len(self.queue),
+            outstanding=outstanding,
+            breaker_state=self.breaker.state,
+            breaker_trips=self.breaker.trips,
+            breaker_recoveries=self.breaker.recoveries,
+            consecutive_failures=self.breaker.consecutive_failures,
+            shed=self.stats.shed,
+            expired=self.stats.expired,
+            failed=self.stats.failed,
+            retries=self.stats.retries,
+            fallback_blocks=self.stats.fallback_blocks,
+            collector_errors=self._collector_errors,
+            stepper_errors=self._stepper_errors,
+        )
+
+    # -- draining / shutdown -----------------------------------------------
     def flush(self, timeout: float = 30.0) -> None:
-        """Wait until every submitted request has been served. Inline
-        mode force-pumps; threaded mode waits on the outstanding futures
-        (the loops keep running)."""
+        """Wait until every submitted request has RESOLVED (result or
+        typed error — an errored future counts as flushed; read
+        ``future.result()`` for the outcome). Inline mode force-pumps
+        until the queue is empty; threaded mode waits on the outstanding
+        futures under ONE SHARED deadline — ``timeout`` bounds the whole
+        flush, not each future — and raises :class:`FlushTimeout` with
+        the still-pending count when the budget runs out."""
         if not self.executor.threaded:
-            self.pump(force=True)
-            assert len(self.queue) == 0
+            stalls = 0
+            while len(self.queue) > 0:
+                before_len = len(self.queue)
+                before_err = self._collector_errors
+                self.pump(force=True)
+                if len(self.queue) < before_len:
+                    stalls = 0
+                    continue
+                # no progress: retry only while the stall is a supervised
+                # drain fault (a transiently poisoned drain heals itself);
+                # a genuinely stuck queue fails loudly instead of looping
+                stalls += 1
+                if self._collector_errors == before_err or stalls > 8:
+                    raise FlushTimeout(
+                        f"inline flush made no progress: {len(self.queue)} "
+                        f"requests still pending (poisoned drain?)",
+                        pending=len(self.queue),
+                    )
+            self._drain_inflight()
             return
         with self._outstanding_lock:
             waiting = list(self._outstanding)
+        t_end = self.clock.now() + timeout
         for fut in waiting:
-            fut.result(timeout)
+            remaining = t_end - self.clock.now()
+            if remaining <= 0 or not fut.wait(remaining):
+                pending = sum(1 for f in waiting if not f.done())
+                raise FlushTimeout(
+                    f"flush deadline ({timeout:.3f}s shared budget) "
+                    f"exhausted with {pending} requests still pending",
+                    pending=pending,
+                )
 
     def close(self, timeout: float = 30.0) -> None:
-        """Serve everything still queued, then stop the loops."""
+        """Serve everything still queued, then stop the loops. A threaded
+        front-end that was never ``start()``ed serves its backlog INLINE
+        here (force-pump) — queued work is never silently dropped. Any
+        future somehow still incomplete after shutdown is failed with
+        ``ServeClosedError`` rather than stranded."""
         if self._closed:
             return
         self._closed = True
-        if self.executor.threaded:
-            if self._started:
-                self._stop.set()
-                self.queue.notify_all()
-                self.executor.join(timeout)
+        if self.executor.threaded and self._started:
+            self._stop.set()
+            self.queue.notify_all()
+            self.executor.join(timeout)
         else:
-            self.pump(force=True)
+            # inline mode, or threaded-but-never-started: the caller is
+            # the loop — run the drain → dispatch → resolve core directly
+            self._pump_core(force=True)
+        with self._outstanding_lock:
+            leftovers = [f for f in self._outstanding if not f.done()]
+            self._outstanding.clear()
+        for fut in leftovers:
+            fut.set_exception(ServeClosedError(
+                "front-end closed with this request still unserved"
+            ))
 
     def __enter__(self) -> "ServeFrontend":
         return self.start()

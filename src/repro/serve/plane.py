@@ -23,6 +23,8 @@ from typing import Dict, List, Tuple
 import jax
 import numpy as np
 
+from repro.serve.health import TenantUnpublishedError
+
 
 def param_avals(params) -> Tuple:
     """Hashable (treedef, per-leaf shape/dtype) identity of a param tree —
@@ -58,15 +60,31 @@ class WeightPlane:
             )
         self._versions[tenant] = params
 
+    def unpublish(self, tenant: str) -> None:
+        """Delete ``tenant``'s weights. A block already queued for this
+        tenant fails at checkout with
+        :class:`~repro.serve.health.TenantUnpublishedError` — the
+        supervised stepper fails that block's futures and keeps serving
+        (the submit→checkout race is a first-class, tested failure
+        mode, not a crash)."""
+        if tenant not in self._versions:
+            raise KeyError(
+                f"unknown tenant {tenant!r}; published: {sorted(self._versions)}"
+            )
+        del self._versions[tenant]
+
     def checkout(self, tenant: str):
         """The params to run ``tenant``'s next block with. Stream mode
         returns FRESH device buffers (safe to donate); resident mode
-        returns the shared device tree (must not be donated)."""
+        returns the shared device tree (must not be donated). Raises
+        ``TenantUnpublishedError`` (a ``KeyError`` subclass) when the
+        tenant was never published or was unpublished after submit."""
         try:
             params = self._versions[tenant]
         except KeyError:
-            raise KeyError(
-                f"unknown tenant {tenant!r}; published: {sorted(self._versions)}"
+            raise TenantUnpublishedError(
+                f"unknown tenant {tenant!r} (unpublished?); published: "
+                f"{sorted(self._versions)}"
             ) from None
         if self.stream:
             return jax.tree_util.tree_map(jax.device_put, params)

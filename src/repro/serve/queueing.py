@@ -34,31 +34,61 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.hetgraph import autotune_bucket_sizes
+from repro.serve.health import DeadlineExceededError, QueueFullError
 
 
 class ServeFuture:
     """Completion handle for one request: ``result(timeout)`` returns the
     ``(num_query_targets, num_classes)`` logits rows (or re-raises the
     serving error). Thread-safe; in inline mode it is completed
-    synchronously during ``pump()``."""
+    synchronously during ``pump()``.
 
-    __slots__ = ("_event", "_value", "_error")
+    Completion is IDEMPOTENT: the first ``set_result``/``set_exception``
+    wins and later calls are no-ops (returning False) — so a request that
+    raced two completion paths (e.g. expired at drain while a retry was
+    resolving, or a supervisor failing a block the stepper already
+    served) can never flip an already-delivered answer. ``via`` records
+    which engine served it (``"primary"``/``"fallback"``/``None``)."""
+
+    __slots__ = ("_event", "_value", "_error", "_lock", "via")
 
     def __init__(self):
         self._event = threading.Event()
+        self._lock = threading.Lock()
         self._value = None
         self._error: Optional[BaseException] = None
+        self.via: Optional[str] = None
 
     def done(self) -> bool:
         return self._event.is_set()
 
-    def set_result(self, value) -> None:
-        self._value = value
-        self._event.set()
+    def set_result(self, value, via: Optional[str] = None) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._value = value
+            self.via = via
+            self._event.set()
+            return True
 
-    def set_exception(self, exc: BaseException) -> None:
-        self._error = exc
-        self._event.set()
+    def set_exception(self, exc: BaseException) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._error = exc
+            self._event.set()
+            return True
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """True once completed (result OR error) — never raises, unlike
+        ``result``; the deadline-aware ``flush`` is built on this."""
+        return self._event.wait(timeout)
+
+    def exception(self, timeout: Optional[float] = None):
+        """The completing exception, or None for a successful result."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not served within timeout")
+        return self._error
 
     def result(self, timeout: Optional[float] = None):
         if not self._event.wait(timeout):
@@ -72,13 +102,17 @@ class ServeFuture:
 class Request:
     """One submitted query: ``targets`` is an int32 vector of target
     vertex ids for ``tenant``'s weights; ``t_submit`` is the queue's
-    clock stamp at submission (latency accounting baseline)."""
+    clock stamp at submission (latency accounting baseline).
+    ``deadline`` (a clock time, not a duration; None = no deadline) is
+    the point past which the request must NOT be served — ``drain``
+    expires stale requests instead of wasting a forward on them."""
 
     targets: np.ndarray
     tenant: str
     t_submit: float
     future: ServeFuture
     seq: int
+    deadline: Optional[float] = None
 
     @property
     def size(self) -> int:
@@ -125,16 +159,22 @@ class BatchPolicy:
     padded to the tightest member ≥ its request total; the largest entry
     is the microbatch ceiling). ``flush_timeout`` bounds how long a
     partial block may wait for more requests (seconds, on the serving
-    clock)."""
+    clock). ``max_pending`` is the admission-control bound: with more
+    than this many requests already queued, ``submit`` sheds the new one
+    with :class:`~repro.serve.health.QueueFullError` instead of letting
+    the backlog (and every queued request's latency) grow without bound
+    (None = unbounded, the pre-robustness behavior)."""
 
     capacities: Tuple[int, ...] = (1, 4, 8, 16)
     flush_timeout: float = 2e-3
+    max_pending: Optional[int] = None
 
     def __post_init__(self):
         caps = tuple(int(c) for c in self.capacities)
         assert caps and all(c > 0 for c in caps), caps
         assert list(caps) == sorted(set(caps)), f"ascending, unique: {caps}"
         object.__setattr__(self, "capacities", caps)
+        assert self.max_pending is None or self.max_pending >= 1
 
     @property
     def max_batch(self) -> int:
@@ -162,12 +202,17 @@ class RequestQueue:
     """Thread-safe FIFO of pending requests with the drain/flush logic.
 
     ``put`` never blocks (serving backpressure is the block pipe's job,
-    not the queue's); ``drain`` is the ONLY consumer and implements the
-    saturation/timeout/force policy above. ``wait``/``notify`` let a
-    collector thread sleep until work or a deadline arrives without
-    polling."""
+    not the queue's) — with a ``maxsize`` it SHEDS instead, raising
+    :class:`~repro.serve.health.QueueFullError` the moment the bound is
+    hit (fail fast beats queueing work that will miss its deadline
+    anyway); ``drain`` is the ONLY consumer and implements the
+    saturation/timeout/force policy above, expiring deadline-stale
+    requests before packing. ``wait``/``notify`` let a collector thread
+    sleep until work or a deadline arrives without polling."""
 
-    def __init__(self):
+    def __init__(self, maxsize: Optional[int] = None):
+        assert maxsize is None or maxsize >= 1, maxsize
+        self.maxsize = maxsize
         self._cond = threading.Condition()
         self._pending: List[Request] = []
         self._seq = 0
@@ -184,7 +229,12 @@ class RequestQueue:
         return self._seq
 
     def put(
-        self, targets, tenant: str, now: float, max_batch: int
+        self,
+        targets,
+        tenant: str,
+        now: float,
+        max_batch: int,
+        deadline: Optional[float] = None,
     ) -> Request:
         targets = np.asarray(targets, np.int32).ravel()
         if targets.size == 0:
@@ -195,9 +245,18 @@ class RequestQueue:
                 f"block capacity {max_batch}; split it client-side"
             )
         with self._cond:
+            if (
+                self.maxsize is not None
+                and len(self._pending) >= self.maxsize
+            ):
+                raise QueueFullError(
+                    f"request queue full: {len(self._pending)} pending >= "
+                    f"max_pending {self.maxsize}; shedding"
+                )
             req = Request(
                 targets=targets, tenant=tenant, t_submit=float(now),
                 future=ServeFuture(), seq=self._seq,
+                deadline=None if deadline is None else float(deadline),
             )
             self._seq += 1
             self._pending.append(req)
@@ -218,25 +277,51 @@ class RequestQueue:
             self._cond.notify_all()
 
     def next_deadline(self, policy: BatchPolicy) -> Optional[float]:
-        """Clock time at which the oldest pending request times out
-        (None when the queue is empty)."""
+        """Next clock time at which a drain becomes due: the earliest
+        flush-timeout expiry OR request deadline over the pending set
+        (None when the queue is empty) — a collector sleeping until this
+        time both emits aged partial blocks and expires stale requests
+        promptly."""
         with self._cond:
             if not self._pending:
                 return None
-            return min(r.t_submit for r in self._pending) + policy.flush_timeout
+            t = min(r.t_submit for r in self._pending) + policy.flush_timeout
+            dl = [r.deadline for r in self._pending if r.deadline is not None]
+            return min([t] + dl)
 
     def drain(
-        self, policy: BatchPolicy, now: float, force: bool = False
+        self,
+        policy: BatchPolicy,
+        now: float,
+        force: bool = False,
+        on_expired=None,
     ) -> List[QueryBlock]:
         """Pack pending requests into emit-ready blocks.
 
-        Per tenant (tenants in first-arrival order, requests FIFO):
+        Deadline-stale requests (``deadline <= now``) are EXPIRED first:
+        removed from the queue and handed to ``on_expired(request)`` (by
+        default their futures complete with
+        :class:`~repro.serve.health.DeadlineExceededError`) — a dead
+        request must never cost a forward, and expiring at drain time
+        means even ``force=True`` shutdown flushes fail them loudly
+        instead of serving them late.
+
+        Then per tenant (tenants in first-arrival order, requests FIFO):
         greedy-pack requests until the next one would overflow
         ``max_batch``; a block closed by overflow is SATURATED and always
         emits, the tenant's final partial block emits only when forced or
         when its oldest member has aged past ``flush_timeout``. Emitted
         requests leave the queue; everything else stays pending."""
         with self._cond:
+            expired = [
+                r for r in self._pending
+                if r.deadline is not None and r.deadline <= now
+            ]
+            if expired:
+                gone = {r.seq for r in expired}
+                self._pending = [
+                    r for r in self._pending if r.seq not in gone
+                ]
             by_tenant: "OrderedDict[str, List[Request]]" = OrderedDict()
             for r in self._pending:
                 by_tenant.setdefault(r.tenant, []).append(r)
@@ -269,7 +354,17 @@ class RequestQueue:
                 self._pending = [
                     r for r in self._pending if r.seq not in emitted
                 ]
-            return blocks
+        # complete expired futures OUTSIDE the queue lock: handlers touch
+        # other locks (stats, outstanding set) and must not nest under it
+        for r in expired:
+            if on_expired is not None:
+                on_expired(r)
+            else:
+                r.future.set_exception(DeadlineExceededError(
+                    f"request expired in queue: deadline {r.deadline:.6f} "
+                    f"<= drain time {now:.6f} (submitted {r.t_submit:.6f})"
+                ))
+        return blocks
 
     @staticmethod
     def _pack(group: List[Request], total: int, policy: BatchPolicy) -> QueryBlock:

@@ -1,0 +1,692 @@
+"""Fault-tolerance suite for ``repro.serve``: admission control,
+deadlines, the supervised stepper (retry / circuit breaker / fallback
+degradation), the tenant-unpublish race, and the crash-recovery behavior
+of the REAL threaded collector/stepper pair — all driven by the
+deterministic ``FaultPlan`` seam.
+
+The serving contract under test, everywhere: NO FUTURE IS EVER STRANDED.
+Every submitted request resolves with a result or a typed error from
+``repro.serve.health`` — under injected dispatch exceptions, slow blocks,
+poisoned drains, tenant unpublishes, queue saturation, and deadline
+storms. Inline tests run on ``FakeClock`` with zero real sleeps; the
+threaded tests synchronize on futures, never on polling sleeps.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import (
+    BatchPolicy,
+    CircuitBreaker,
+    DeadlineExceededError,
+    FakeClock,
+    FaultPlan,
+    FlushTimeout,
+    InlineExecutor,
+    QueueFullError,
+    RequestQueue,
+    ServeClosedError,
+    ServeFrontend,
+    ServeFuture,
+    SupervisorPolicy,
+    SystemClock,
+    TenantUnpublishedError,
+    ThreadExecutor,
+    TransientDispatchError,
+)
+
+POLICY = BatchPolicy(capacities=(1, 4, 8), flush_timeout=0.01)
+
+
+class FakeSession:
+    """Policy-logic stand-in (mirrors tests/test_serve.py): ``query``
+    returns ``scale * table[idx]`` so tenant and ENGINE routing are
+    observable — a fallback instance can rescale its table."""
+
+    donate_params = False
+
+    def __init__(self, num_targets=64, num_classes=3, table=None):
+        if table is None:
+            rng = np.random.default_rng(0)
+            table = rng.normal(size=(num_targets, num_classes))
+        self.table = table
+        self.compiled = []
+        self.served = []
+
+    def compile_query(self, capacity):
+        self.compiled.append(int(capacity))
+
+    def query(self, params, idx):
+        idx = np.asarray(idx)
+        assert idx.shape[0] in self.compiled, (idx.shape, self.compiled)
+        self.served.append(idx.shape[0])
+        return float(params["scale"]) * self.table[idx]
+
+
+def _inline(policy=POLICY, fallback=None, supervisor=None, faults=None,
+            plane=None, session=None):
+    session = session if session is not None else FakeSession()
+    clock = FakeClock()
+    fe = ServeFrontend(
+        session,
+        plane if plane is not None else {"scale": np.float32(1.0)},
+        policy=policy, clock=clock, executor=InlineExecutor(),
+        fallback=fallback, supervisor=supervisor, faults=faults,
+    )
+    return fe, session, clock
+
+
+def _assert_all_resolved(futs):
+    """The no-stranded-futures contract: every future is done, each with
+    a result or a typed error."""
+    for f in futs:
+        assert f.done(), "stranded future"
+        f.exception(0)  # must not raise TimeoutError
+
+
+# ---------------------------------------------------------------------------
+# ServeFuture idempotency
+# ---------------------------------------------------------------------------
+
+
+def test_future_completion_is_idempotent_first_wins():
+    f = ServeFuture()
+    assert f.set_result(np.arange(3), via="primary")
+    assert not f.set_exception(RuntimeError("late loser"))
+    assert not f.set_result(np.zeros(3))
+    np.testing.assert_array_equal(f.result(0), np.arange(3))
+    assert f.exception(0) is None and f.via == "primary"
+
+    g = ServeFuture()
+    assert g.set_exception(TransientDispatchError("x"))
+    assert not g.set_result(np.arange(3))
+    with pytest.raises(TransientDispatchError):
+        g.result(0)
+    assert g.wait(0)  # wait() reports completion without raising
+
+
+# ---------------------------------------------------------------------------
+# admission control + deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_queue_sheds_with_queue_full_error():
+    q = RequestQueue(maxsize=2)
+    q.put([1], "a", now=0.0, max_batch=8)
+    q.put([2], "a", now=0.0, max_batch=8)
+    with pytest.raises(QueueFullError, match="shedding"):
+        q.put([3], "a", now=0.0, max_batch=8)
+    assert len(q) == 2  # the shed request left no residue
+
+
+def test_frontend_sheds_fast_and_counts(
+):
+    fe, sess, clock = _inline(
+        policy=BatchPolicy(capacities=(1, 4, 8), flush_timeout=0.01,
+                           max_pending=4),
+    )
+    admitted = [fe.submit([i]) for i in range(4)]
+    shed = 0
+    for i in range(6):
+        with pytest.raises(QueueFullError):
+            fe.submit([i])
+        shed += 1
+    fe.pump(force=True)
+    for i, f in enumerate(admitted):
+        np.testing.assert_array_equal(f.result(0), sess.table[[i]])
+    assert fe.stats.shed == shed == 6
+    assert fe.stats.completed == 4
+    assert fe.health().shed == 6
+
+
+def test_deadline_expires_at_drain_not_served_dead():
+    fe, sess, clock = _inline()
+    live = fe.submit([1, 2], timeout=1.0)
+    stale = fe.submit([3], timeout=0.005)
+    clock.advance(0.02)  # past both the flush timeout and stale's deadline
+    n = fe.pump()
+    assert n == 1  # one block: the live request only
+    np.testing.assert_array_equal(live.result(0), sess.table[[1, 2]])
+    with pytest.raises(DeadlineExceededError, match="expired in queue"):
+        stale.result(0)
+    assert fe.stats.expired == 1 and fe.stats.completed == 1
+    assert len(fe.queue) == 0
+    _assert_all_resolved([live, stale])
+
+
+def test_submit_rejects_nonpositive_timeout():
+    fe, _, _ = _inline()
+    with pytest.raises(ValueError, match="must be > 0"):
+        fe.submit([1], timeout=0.0)
+
+
+def test_next_deadline_includes_request_deadlines():
+    q = RequestQueue()
+    q.put([1], "a", now=0.0, max_batch=8, deadline=0.004)
+    q.put([2], "a", now=0.0, max_batch=8)
+    # request deadline (0.004) is earlier than flush expiry (0.01)
+    assert q.next_deadline(POLICY) == pytest.approx(0.004)
+    (blk,) = q.drain(POLICY, now=0.02, force=True)
+    assert blk.n_valid == 1  # the deadlined request expired, not packed
+
+
+def test_force_drain_still_expires_stale_requests():
+    """Shutdown flushes fail dead requests loudly instead of serving
+    them late."""
+    q = RequestQueue()
+    r = q.put([1], "a", now=0.0, max_batch=8, deadline=0.001)
+    blocks = q.drain(POLICY, now=1.0, force=True)
+    assert blocks == []
+    with pytest.raises(DeadlineExceededError):
+        r.future.result(0)
+
+
+# ---------------------------------------------------------------------------
+# ServeStats.qps regression (same-instant completions)
+# ---------------------------------------------------------------------------
+
+
+def test_qps_finite_when_all_completions_on_submit_instant():
+    """Regression: a fake-clock burst that completes on the submit
+    instant used to return NaN (t_last_done <= t_first_submit); now the
+    window is floored at an epsilon and qps is finite."""
+    fe, _, clock = _inline()
+    futs = [fe.submit([i, i + 1]) for i in range(4)]  # one full block of 8
+    assert fe.pump() == 1  # clock never advanced: done at t==0
+    assert all(f.done() for f in futs)
+    q = fe.stats.qps()
+    assert np.isfinite(q) and q == pytest.approx(4 / 1e-6)
+    assert np.isfinite(fe.stats.summary()["qps"])
+    # no completions at all still reads NaN, not a crash
+    from repro.serve import ServeStats
+
+    assert np.isnan(ServeStats().qps())
+
+
+# ---------------------------------------------------------------------------
+# retry with capped exponential backoff on the injected clock
+# ---------------------------------------------------------------------------
+
+
+def test_transient_dispatch_retries_with_exact_backoff():
+    plan = FaultPlan()
+    plan.fail("dispatch", TransientDispatchError("flaky"), times=2)
+    sup = SupervisorPolicy(max_retries=2, backoff_base=1e-3, backoff_cap=0.1)
+    fe, sess, clock = _inline(supervisor=sup, faults=plan)
+    futs = [fe.submit([i, i + 1]) for i in range(4)]  # one block of 8
+    assert fe.pump() == 1
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(
+            f.result(0), sess.table[[i, i + 1]]
+        )
+        assert f.via == "primary"
+    # two failed attempts, two backoff sleeps (1ms then 2ms), then success
+    assert fe.stats.retries == 2
+    assert clock.sleeps == [1e-3, 2e-3]
+    assert fe.breaker.state == CircuitBreaker.CLOSED
+    assert fe.breaker.trips == 0
+
+
+def test_retries_exhausted_fails_block_with_the_error():
+    plan = FaultPlan()
+    # exactly the retry budget: attempt 0 + 1 retry both poisoned
+    plan.fail("dispatch", TransientDispatchError("hard down"), times=2)
+    sup = SupervisorPolicy(max_retries=1, backoff_base=1e-3)
+    fe, sess, clock = _inline(supervisor=sup, faults=plan)
+    bad = [fe.submit([i, i + 1]) for i in range(4)]
+    assert fe.pump() == 1
+    for f in bad:
+        with pytest.raises(TransientDispatchError, match="hard down"):
+            f.result(0)
+    # the supervisor survived: the fault budget is spent, the next block
+    # serves normally
+    good = [fe.submit([i, i + 1]) for i in range(4)]
+    clock.advance(POLICY.flush_timeout)
+    fe.pump(force=True)
+    for i, f in enumerate(good):
+        np.testing.assert_array_equal(f.result(0), sess.table[[i, i + 1]])
+    assert fe.stats.failed == 4 and fe.stats.failed_blocks == 1
+    _assert_all_resolved(bad + good)
+
+
+def test_backoff_is_capped():
+    sup = SupervisorPolicy(max_retries=5, backoff_base=1e-2, backoff_cap=3e-2)
+    assert [sup.backoff(a) for a in range(5)] == [
+        1e-2, 2e-2, 3e-2, 3e-2, 3e-2
+    ]
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker: trip → degraded fallback serving → half-open → recover
+# ---------------------------------------------------------------------------
+
+
+def _primary_and_fallback():
+    primary = FakeSession()
+    fallback = FakeSession(table=3.0 * primary.table)
+    return primary, fallback
+
+
+def test_breaker_trips_serves_fallback_and_recovers():
+    primary, fallback = _primary_and_fallback()
+    plan = FaultPlan()
+    # 3 fatal primary failures; the fallback engine is never poisoned
+    plan.fail("dispatch", RuntimeError("device lost"),
+              engine="primary", times=3)
+    sup = SupervisorPolicy(
+        max_retries=0, breaker_threshold=3, breaker_cooldown=0.05,
+    )
+    fe, _, clock = _inline(
+        session=primary, fallback=fallback, supervisor=sup, faults=plan,
+    )
+
+    # burst of 5 full blocks: 3 primary failures trip the breaker, every
+    # block is still SERVED (degraded) — zero failed requests
+    futs = [fe.submit([i % 32, i % 32 + 1]) for i in range(20)]
+    assert fe.pump() == 5
+    for i, f in enumerate(futs):
+        assert f.via == "fallback"
+        np.testing.assert_array_equal(
+            f.result(0), fallback.table[[i % 32, i % 32 + 1]]
+        )
+    assert fe.breaker.state == CircuitBreaker.OPEN
+    assert fe.breaker.trips == 1
+    assert fe.stats.fallback_blocks == 5 and fe.stats.failed == 0
+    h = fe.health()
+    assert h.breaker_state == "open" and not h.healthy and h.live
+
+    # cooldown elapses → next block is the half-open probe → primary
+    # (fault exhausted) succeeds → CLOSED
+    clock.advance(0.05)
+    futs2 = [fe.submit([i, i + 1]) for i in range(8)]  # two full blocks
+    assert fe.pump() == 2
+    for i, f in enumerate(futs2):
+        assert f.via == "primary"
+        np.testing.assert_array_equal(
+            f.result(0), primary.table[[i, i + 1]]
+        )
+    assert fe.breaker.state == CircuitBreaker.CLOSED
+    assert fe.breaker.recoveries == 1
+    assert fe.health().healthy
+    _assert_all_resolved(futs + futs2)
+
+
+def test_breaker_failed_probe_reopens():
+    primary, fallback = _primary_and_fallback()
+    plan = FaultPlan()
+    plan.fail("dispatch", RuntimeError("still down"),
+              engine="primary", times=4)  # 3 to trip + 1 failed probe
+    sup = SupervisorPolicy(
+        max_retries=0, breaker_threshold=3, breaker_cooldown=0.05,
+    )
+    fe, _, clock = _inline(
+        session=primary, fallback=fallback, supervisor=sup, faults=plan,
+    )
+    for i in range(3):
+        fe.submit([2 * i, 2 * i + 1], timeout=None)
+        clock.advance(POLICY.flush_timeout)
+        fe.pump(force=True)
+    assert fe.breaker.state == CircuitBreaker.OPEN and fe.breaker.trips == 1
+    clock.advance(0.05)
+    f = fe.submit([1, 2])
+    clock.advance(POLICY.flush_timeout)
+    fe.pump(force=True)  # probe fails -> OPEN again, block still served
+    assert f.via == "fallback"
+    assert fe.breaker.state == CircuitBreaker.OPEN
+    assert fe.breaker.recoveries == 0
+    # and the NEXT cooldown's probe (fault exhausted) recovers
+    clock.advance(0.05)
+    g = fe.submit([3, 4])
+    clock.advance(POLICY.flush_timeout)
+    fe.pump(force=True)
+    assert g.via == "primary"
+    assert fe.breaker.state == CircuitBreaker.CLOSED
+    assert fe.breaker.recoveries == 1
+
+
+def test_failure_without_fallback_fails_block_but_keeps_serving():
+    plan = FaultPlan()
+    plan.fail("dispatch", RuntimeError("boom"), times=1)
+    fe, sess, clock = _inline(faults=plan)
+    bad = fe.submit([1, 2])
+    clock.advance(POLICY.flush_timeout)
+    fe.pump(force=True)
+    with pytest.raises(RuntimeError, match="boom"):
+        bad.result(0)
+    good = fe.submit([3, 4])
+    clock.advance(POLICY.flush_timeout)
+    fe.pump(force=True)
+    np.testing.assert_array_equal(good.result(0), sess.table[[3, 4]])
+    assert fe.stats.failed == 1 and fe.stats.completed == 1
+
+
+def test_fallback_ladder_is_prewarmed_at_construction():
+    primary, fallback = _primary_and_fallback()
+    fe, _, _ = _inline(session=primary, fallback=fallback)
+    assert sorted(fallback.compiled) == list(POLICY.capacities)
+
+
+# ---------------------------------------------------------------------------
+# tenant-unpublish race
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_unpublish_race_fails_block_not_stepper():
+    from repro.serve import WeightPlane
+
+    sess = FakeSession()
+    plane = WeightPlane({"scale": np.float32(1.0)})
+    plane.publish("a", {"scale": np.float32(1.0)})
+    plane.publish("b", {"scale": np.float32(2.0)})
+    plan = FaultPlan()
+    # the race: b is unpublished AFTER submit, right before its checkout
+    plan.call(
+        "checkout", lambda ctx: ctx.frontend.plane.unpublish("b"),
+        tenant="b", times=1,
+    )
+    fe, _, clock = _inline(session=sess, plane=plane, faults=plan)
+    fa = [fe.submit([1, 2], tenant="a") for _ in range(2)]
+    fb = [fe.submit([1, 2], tenant="b") for _ in range(2)]
+    clock.advance(POLICY.flush_timeout)
+    fe.pump(force=True)
+    for f in fa:
+        np.testing.assert_array_equal(f.result(0), sess.table[[1, 2]])
+    for f in fb:
+        with pytest.raises(TenantUnpublishedError, match="unknown tenant"):
+            f.result(0)
+    # the stepper survived AND the breaker was never charged: an
+    # unpublished tenant is not a flow failure
+    assert fe.breaker.consecutive_failures == 0
+    assert fe.stats.failed == 2
+    # republished tenant serves again
+    fe.plane.publish("b", {"scale": np.float32(2.0)})
+    f2 = fe.submit([3], tenant="b")
+    clock.advance(POLICY.flush_timeout)
+    fe.pump(force=True)
+    np.testing.assert_array_equal(f2.result(0), 2.0 * sess.table[[3]])
+    _assert_all_resolved(fa + fb + [f2])
+
+
+def test_plane_unpublish_unknown_tenant_raises():
+    from repro.serve import WeightPlane
+
+    plane = WeightPlane({"scale": np.float32(1.0)})
+    with pytest.raises(KeyError, match="unknown tenant"):
+        plane.unpublish("ghost")
+
+
+# ---------------------------------------------------------------------------
+# collector supervision: poisoned drain
+# ---------------------------------------------------------------------------
+
+
+def test_inline_collector_survives_poisoned_drain():
+    plan = FaultPlan()
+    plan.fail("drain", RuntimeError("poisoned drain"), times=1)
+    fe, sess, clock = _inline(faults=plan)
+    f = fe.submit([5])
+    clock.advance(POLICY.flush_timeout)
+    assert fe.pump(force=True) == 0  # the poisoned drain emitted nothing
+    assert not f.done() and len(fe.queue) == 1
+    assert fe.health().collector_errors == 1
+    fe.pump(force=True)  # next iteration heals
+    np.testing.assert_array_equal(f.result(0), sess.table[[5]])
+
+
+def test_inline_flush_retries_transient_poison_then_raises_when_stuck():
+    plan = FaultPlan()
+    plan.fail("drain", RuntimeError("poisoned"), times=2)
+    fe, sess, clock = _inline(faults=plan)
+    f = fe.submit([7])
+    fe.flush()  # retries through both poisoned drains
+    np.testing.assert_array_equal(f.result(0), sess.table[[7]])
+    # a permanently poisoned drain fails loudly with the pending count
+    plan2 = FaultPlan()
+    plan2.fail("drain", RuntimeError("forever"), times=None)
+    fe2, _, _ = _inline(faults=plan2)
+    g = fe2.submit([1])
+    with pytest.raises(FlushTimeout) as ei:
+        fe2.flush()
+    assert ei.value.pending == 1
+    assert not g.done()
+
+
+# ---------------------------------------------------------------------------
+# flush / close semantics
+# ---------------------------------------------------------------------------
+
+
+def test_threaded_flush_shares_one_deadline_across_futures():
+    """Regression: flush(timeout) used to wait up to timeout PER future
+    (worst case N x timeout). With a permanently poisoned drain nothing
+    ever serves; flushing N=8 futures on a 0.3s budget must take ~0.3s
+    total, not ~2.4s, and report the pending count."""
+    import time
+
+    plan = FaultPlan()
+    plan.fail("drain", RuntimeError("wedged"), times=None)
+    fe = ServeFrontend(
+        FakeSession(), {"scale": np.float32(1.0)}, policy=POLICY,
+        clock=SystemClock(), executor=ThreadExecutor(), faults=plan,
+    ).start()
+    futs = [fe.submit([i]) for i in range(8)]
+    t0 = time.monotonic()
+    with pytest.raises(FlushTimeout) as ei:
+        fe.flush(timeout=0.3)
+    elapsed = time.monotonic() - t0
+    assert ei.value.pending == 8
+    assert elapsed < 8 * 0.3 / 2, (
+        f"flush took {elapsed:.2f}s — budget is not shared"
+    )
+    fe.close(timeout=1.0)
+    # close() failed the wedged futures loudly instead of stranding them
+    for f in futs:
+        assert f.done()
+
+
+def test_close_never_started_threaded_serves_backlog_inline():
+    """Regression: close() on a threaded front-end that was never
+    start()ed used to drop queued requests with futures hanging."""
+    sess = FakeSession()
+    fe = ServeFrontend(
+        sess, {"scale": np.float32(1.0)}, policy=POLICY,
+        clock=SystemClock(), executor=ThreadExecutor(),
+    )
+    futs = [fe.submit([i]) for i in range(3)]  # never start()ed
+    fe.close()
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(f.result(0), sess.table[[i]])
+    with pytest.raises(RuntimeError, match="closed"):
+        fe.submit([1])
+
+
+def test_close_fails_unserved_futures_with_typed_error():
+    """Even a wedged threaded front-end must not strand futures at
+    close: anything unserved resolves with ServeClosedError."""
+    plan = FaultPlan()
+    plan.fail("drain", RuntimeError("wedged"), times=None)
+    fe = ServeFrontend(
+        FakeSession(), {"scale": np.float32(1.0)}, policy=POLICY,
+        clock=SystemClock(), executor=ThreadExecutor(), faults=plan,
+    ).start()
+    futs = [fe.submit([i]) for i in range(4)]
+    fe.close(timeout=0.5)
+    for f in futs:
+        with pytest.raises((ServeClosedError, RuntimeError)):
+            f.result(0)
+    _assert_all_resolved(futs)
+
+
+# ---------------------------------------------------------------------------
+# health reporting
+# ---------------------------------------------------------------------------
+
+
+def test_health_snapshot_inline_lifecycle():
+    fe, _, clock = _inline()
+    h = fe.health()
+    assert h.mode == "inline" and h.live and h.healthy
+    assert h.queue_depth == 0 and h.outstanding == 0
+    fe.submit([1])
+    h = fe.health()
+    assert h.queue_depth == 1 and h.outstanding == 1
+    fe.close()
+    assert not fe.health().live
+
+
+def test_health_threaded_liveness():
+    fe = ServeFrontend(
+        FakeSession(), {"scale": np.float32(1.0)}, policy=POLICY,
+        clock=SystemClock(), executor=ThreadExecutor(),
+    )
+    assert not fe.health().live  # threaded but not started: not live
+    fe.start()
+    assert fe.health().live
+    fe.close()
+    h = fe.health()
+    assert not h.live and not h.collector_alive and not h.stepper_alive
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_rule_after_times_counting():
+    plan = FaultPlan()
+    rule = plan.fail("dispatch", TransientDispatchError("x"),
+                     after=2, times=2, label="window")
+    from repro.serve import FaultContext
+
+    fired = 0
+    for _ in range(6):
+        try:
+            plan.fire("dispatch", FaultContext(
+                site="dispatch", clock=FakeClock()))
+        except TransientDispatchError:
+            fired += 1
+    assert fired == 2 and rule.hits == 6 and rule.fired == 2
+    assert plan.injected == [("dispatch", "window")] * 2
+    assert plan.count("dispatch") == 2 and plan.count("drain") == 0
+
+
+def test_fault_rules_filter_by_tenant_and_engine():
+    from repro.serve import FaultContext
+
+    plan = FaultPlan()
+    plan.fail("dispatch", TransientDispatchError("b only"),
+              tenant="b", engine="primary", times=None)
+    clock = FakeClock()
+    # wrong tenant / wrong engine: no fire
+    plan.fire("dispatch", FaultContext(
+        site="dispatch", clock=clock, tenant="a", engine="primary"))
+    plan.fire("dispatch", FaultContext(
+        site="dispatch", clock=clock, tenant="b", engine="fallback"))
+    with pytest.raises(TransientDispatchError):
+        plan.fire("dispatch", FaultContext(
+            site="dispatch", clock=clock, tenant="b", engine="primary"))
+
+
+def test_fault_delay_advances_fake_clock_only():
+    plan = FaultPlan()
+    plan.delay("dispatch", 0.25, times=1)
+    fe, sess, clock = _inline(faults=plan)
+    f = fe.submit([1, 2])
+    clock.advance(POLICY.flush_timeout)
+    t0 = clock.now()
+    fe.pump(force=True)
+    assert clock.now() - t0 == pytest.approx(0.25)  # virtual, not real
+    np.testing.assert_array_equal(f.result(0), sess.table[[1, 2]])
+
+
+# ---------------------------------------------------------------------------
+# threaded crash-recovery: the REAL collector/stepper pair under faults
+# ---------------------------------------------------------------------------
+
+
+def _threaded(faults=None, fallback=None, supervisor=None):
+    sess = FakeSession()
+    fe = ServeFrontend(
+        sess, {"scale": np.float32(1.0)},
+        policy=BatchPolicy(capacities=(1, 4, 8), flush_timeout=2e-3),
+        clock=SystemClock(), executor=ThreadExecutor(),
+        faults=faults, fallback=fallback, supervisor=supervisor,
+    )
+    return fe, sess
+
+
+def test_threaded_stepper_crash_mid_burst_fails_only_that_block():
+    """A fatal dispatch fault on tenant "bad" mid-burst: ONLY that
+    block's futures error; every other tenant's request serves, the
+    stepper thread survives."""
+    from repro.serve import WeightPlane
+
+    sess = FakeSession()
+    plane = WeightPlane({"scale": np.float32(1.0)})
+    plane.publish("good", {"scale": np.float32(1.0)})
+    plane.publish("bad", {"scale": np.float32(1.0)})
+    plan = FaultPlan()
+    plan.fail("dispatch", RuntimeError("mid-burst crash"),
+              tenant="bad", times=None)
+    fe = ServeFrontend(
+        sess, plane,
+        policy=BatchPolicy(capacities=(1, 4, 8), flush_timeout=2e-3),
+        clock=SystemClock(), executor=ThreadExecutor(), faults=plan,
+    )
+    with fe:
+        good = [fe.submit([i, i + 1], tenant="good") for i in range(8)]
+        bad = [fe.submit([i], tenant="bad") for i in range(4)]
+        more = [fe.submit([i + 2, i + 3], tenant="good") for i in range(8)]
+        fe.flush(timeout=30.0)
+        for i, f in enumerate(good):
+            np.testing.assert_array_equal(f.result(1), sess.table[[i, i + 1]])
+        for f in bad:
+            with pytest.raises(RuntimeError, match="mid-burst crash"):
+                f.result(1)
+        for i, f in enumerate(more):
+            np.testing.assert_array_equal(
+                f.result(1), sess.table[[i + 2, i + 3]]
+            )
+        h = fe.health()
+        assert h.live and h.stepper_alive
+        assert h.failed == 4
+    _assert_all_resolved(good + bad + more)
+
+
+def test_threaded_collector_survives_poisoned_drain():
+    plan = FaultPlan()
+    plan.fail("drain", RuntimeError("poisoned drain"), times=1)
+    fe, sess = _threaded(faults=plan)
+    with fe:
+        futs = [fe.submit([i]) for i in range(4)]
+        fe.flush(timeout=30.0)
+        for i, f in enumerate(futs):
+            np.testing.assert_array_equal(f.result(1), sess.table[[i]])
+        h = fe.health()
+        assert h.collector_alive and h.collector_errors >= 1
+    _assert_all_resolved(futs)
+
+
+def test_threaded_breaker_degradation_under_real_threads():
+    primary = FakeSession()
+    fallback = FakeSession(table=2.0 * primary.table)
+    plan = FaultPlan()
+    plan.fail("dispatch", RuntimeError("down"), engine="primary", times=None)
+    fe = ServeFrontend(
+        primary, {"scale": np.float32(1.0)},
+        policy=BatchPolicy(capacities=(1, 4, 8), flush_timeout=2e-3),
+        clock=SystemClock(), executor=ThreadExecutor(),
+        faults=plan, fallback=fallback,
+        supervisor=SupervisorPolicy(max_retries=0, breaker_threshold=2,
+                                    breaker_cooldown=1e-3),
+    )
+    with fe:
+        futs = [fe.submit([i, i + 1]) for i in range(8)]
+        fe.flush(timeout=30.0)
+        for i, f in enumerate(futs):
+            assert f.via == "fallback"
+            np.testing.assert_array_equal(
+                f.result(1), fallback.table[[i, i + 1]]
+            )
+        assert fe.breaker.trips >= 1
+        assert fe.stats.failed == 0  # degraded, never dropped
+    _assert_all_resolved(futs)
