@@ -12,9 +12,15 @@ before the smoke step are counted — rows merged forward from the committed
 trajectory keep their old stamp, so a smoke that re-emits only a subset of
 its rows fails even though the file itself was rewritten.
 
+A row counts when it carries at least one NUMERIC metric field — any
+key besides the ``name``/``derived``/``ts`` bookkeeping whose value is a
+number (``us_per_call`` is the common one, but e.g. the ego bench's
+``rows_per_query`` rows count equally). Pass ``--metric NAME`` to demand
+one specific metric field instead.
+
 Usage:
     python benchmarks/check_emitted.py BENCH_na_sharded.json na_sharded_ \
-        --min-rows 4 [--newer-than .bench_stamp]
+        --min-rows 4 [--newer-than .bench_stamp] [--metric us_per_call]
 """
 from __future__ import annotations
 
@@ -23,8 +29,25 @@ import json
 import os
 import sys
 
+# bookkeeping keys every row carries; anything else numeric is a metric
+NON_METRIC_KEYS = ("name", "derived", "ts")
 
-def main() -> int:
+
+def has_metric(row: dict, metric: str | None = None) -> bool:
+    """True when ``row`` carries a numeric metric field (or specifically
+    ``metric``, when given). bools are not metrics."""
+
+    def numeric(v) -> bool:
+        return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+    if metric is not None:
+        return numeric(row.get(metric))
+    return any(
+        numeric(v) for k, v in row.items() if k not in NON_METRIC_KEYS
+    )
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("path", help="BENCH_*.json file the smoke step must write")
     ap.add_argument("prefix", help="required row-name prefix")
@@ -34,7 +57,12 @@ def main() -> int:
         help="marker file touched before the smoke step; the BENCH file "
         "must have been modified after it",
     )
-    args = ap.parse_args()
+    ap.add_argument(
+        "--metric", default=None,
+        help="require this specific numeric metric field on counted rows "
+        "(default: any numeric metric field counts)",
+    )
+    args = ap.parse_args(argv)
 
     if not os.path.exists(args.path):
         print(f"FAIL: {args.path} does not exist — the benchmark emitted "
@@ -47,7 +75,8 @@ def main() -> int:
         return 1
     hits = [
         r for r in rows
-        if r.get("name", "").startswith(args.prefix) and "us_per_call" in r
+        if r.get("name", "").startswith(args.prefix)
+        and has_metric(r, args.metric)
     ]
     fresh = hits
     if args.newer_than is not None:

@@ -56,8 +56,29 @@ def bench_json_path(explicit=None) -> Path:
     return Path(f"BENCH_{stem}.json")
 
 
-def emit(name: str, us_per_call: float, derived: str = "", path=None):
-    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+def emit(
+    name: str,
+    us_per_call: float | None = None,
+    derived: str = "",
+    path=None,
+    **metrics: float,
+):
+    """Record one benchmark row (keyed by ``name``, replace-in-place).
+
+    ``us_per_call`` is the traditional latency metric; rows may instead —
+    or additionally — carry arbitrary numeric ``metrics`` keyword fields
+    (e.g. the ego bench's ``rows_per_query``). At least one numeric metric
+    is required: that is the contract ``benchmarks/check_emitted.py``
+    guards (a row with no metric at all is a benchmark bug, not data).
+    """
+    for k, v in metrics.items():
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            raise TypeError(f"metric {k}={v!r} is not numeric")
+    if us_per_call is None and not metrics:
+        raise ValueError(f"row {name!r} carries no numeric metric")
+    shown = f"{us_per_call:.1f}" if us_per_call is not None else "-"
+    extra = "".join(f",{k}={v}" for k, v in sorted(metrics.items()))
+    print(f"{name},{shown},{derived}{extra}", flush=True)
     path = bench_json_path(path)
     rows = []
     if path.exists():
@@ -70,12 +91,12 @@ def emit(name: str, us_per_call: float, derived: str = "", path=None):
     # forward from the committed file keep their old stamp, which is what
     # lets benchmarks/check_emitted.py catch a smoke that silently re-emits
     # only a subset of its rows
-    rows.append(
-        {
-            "name": name,
-            "us_per_call": round(us_per_call, 1),
-            "derived": derived,
-            "ts": round(time.time(), 1),
-        }
-    )
+    row = {"name": name}
+    if us_per_call is not None:
+        row["us_per_call"] = round(us_per_call, 1)
+    row["derived"] = derived
+    row["ts"] = round(time.time(), 1)
+    for k, v in sorted(metrics.items()):
+        row[k] = round(float(v), 4)
+    rows.append(row)
     path.write_text(json.dumps(rows, indent=1) + "\n")

@@ -1,0 +1,309 @@
+"""Table-driven CI smoke harness: run every benchmark smoke + its guard.
+
+The workflow used to hand-copy a smoke step plus a ``check_emitted``
+guard step per benchmark — six near-identical pairs per job, each a
+chance to fork (a stamp touched in one step but not another, a guard
+pointing at the wrong BENCH file, a min-rows floor updated in one job
+but not the other). This harness is the single source of truth: one
+:class:`Smoke` row per benchmark — script, args, BENCH file, row-name
+prefix, min-rows floor — and the driver supplies the invariant plumbing
+(touch the freshness stamp once up front, ``PYTHONPATH=src:.``, a
+``::group::`` annotation per smoke, the ``check_emitted`` guard after
+every smoke). CI runs exactly one step per job:
+
+    python benchmarks/run_smokes.py --suite tier1
+    python benchmarks/run_smokes.py --suite multidevice
+
+All smokes in a suite run even after a failure (one broken benchmark
+must not mask another's regression); the exit code is the number of
+failed smokes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import shlex
+import subprocess
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import List, Sequence, Tuple
+
+import check_emitted
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@dataclass(frozen=True)
+class Smoke:
+    """One smoke step: run ``script`` with ``args``, then demand at least
+    ``min_rows`` fresh rows whose names start with ``prefix`` in
+    ``bench`` (freshness = the row's ``ts`` postdates the run stamp)."""
+
+    name: str
+    script: str
+    args: Tuple[str, ...]
+    bench: str
+    prefix: str
+    min_rows: int
+    doc: str
+    # shell-style commands run before the smoke itself (still under
+    # PYTHONPATH=src:.) — e.g. the dataset smoke's export round-trips
+    pre: Tuple[str, ...] = ()
+    # extra flags forwarded to check_emitted (e.g. ("--metric", "..."))
+    guard_args: Tuple[str, ...] = ()
+
+
+SMOKES: Tuple[Smoke, ...] = (
+    Smoke(
+        name="na_dispatch",
+        script="benchmarks/na_dispatch.py",
+        args=("--smoke",),
+        bench="BENCH_na_dispatch.json",
+        prefix="na_dispatch_",
+        min_rows=2,
+        doc="bucketed NA = ONE pallas_call pair per semantic graph; "
+        "single-dispatch >= 2x over the per-bucket loop on a >= 4-bucket "
+        "layout; autotuned capacities never beat by the static default",
+    ),
+    Smoke(
+        name="session_overhead",
+        script="benchmarks/session_overhead.py",
+        args=("--smoke",),
+        bench="BENCH_session.json",
+        prefix="session_",
+        # 2 rows (legacy + session) per flow x 3 flows = 6 — exact floor
+        min_rows=6,
+        doc="task.compile(flow) sessions bit-identical to the jitted "
+        "legacy program for every flow; >= 2x lower per-call latency "
+        "than eager dispatch on the jnp flows; ZERO per-call Python NA "
+        "dispatch / ambient-mesh lookups across repeated session calls",
+    ),
+    Smoke(
+        name="serve_load",
+        script="benchmarks/serve_load.py",
+        args=("--smoke",),
+        bench="BENCH_serve.json",
+        prefix="serve_",
+        min_rows=2,
+        doc="microbatched serving >= 2x serial throughput at mean batch "
+        ">= 8; results BIT-EXACT vs both the serial loop and the full "
+        "forward; one Python dispatch per block, zero NA dispatch / "
+        "mesh lookups / retraces while serving",
+    ),
+    Smoke(
+        name="serve_chaos",
+        script="benchmarks/serve_chaos.py",
+        args=("--smoke",),
+        bench="BENCH_chaos.json",
+        prefix="chaos_",
+        min_rows=5,
+        doc="under every injected fault class: NO future stranded; "
+        "breaker trip -> degraded fallback -> recovery with bit-exact "
+        "parity against BOTH flows; deadline expiry costs zero "
+        "forwards; shedding fails fast",
+    ),
+    Smoke(
+        name="sgb_scale",
+        script="benchmarks/sgb_scale.py",
+        args=("--smoke",),
+        bench="BENCH_sgb_scale.json",
+        prefix="sgb_scale_",
+        # 1 gen-speedup + 4 (generate, sgb_cold, sgb_cachehit, na_fused)
+        # x 3 datasets = 13 — exact floor
+        min_rows=13,
+        doc="dataset ingestion critical path: on-disk dump export + "
+        "bit-identical reload (npz AND csv edge formats), vectorized "
+        "generator timing, SGB artifact-cache miss->hit statuses, "
+        "loaded-vs-built layout parity on all three datasets",
+        pre=(
+            "tools/export_dataset.py --dataset acm --scale 0.05 "
+            "--out /tmp/hgb/acm --verify",
+            "tools/export_dataset.py --dataset imdb --scale 0.05 "
+            "--out /tmp/hgb/imdb --edge-format csv --verify",
+        ),
+    ),
+    Smoke(
+        name="serve_ego",
+        script="benchmarks/serve_ego.py",
+        args=("--smoke",),
+        bench="BENCH_ego.json",
+        prefix="ego_",
+        # 3 per-model parity rows + 1 scaling row (which carries
+        # rows_per_query metrics and NO us_per_call — the generalized
+        # any-numeric-metric guard must count it)
+        min_rows=4,
+        doc="ego-batched query logits match the full-graph forward "
+        "within 1e-5 for all 3 models; every query lands as one ego "
+        "dispatch or one counted fallback; rows gathered per query "
+        "scale with the neighborhood, not |V|",
+    ),
+    Smoke(
+        name="na_sharded",
+        script="benchmarks/na_sharded.py",
+        args=("--smoke",),
+        bench="BENCH_na_sharded.json",
+        prefix="na_sharded_",
+        min_rows=4,
+        doc="sharded NA bit-identical to single-device at every mesh "
+        "size (one row per mesh size = 4); ONE pallas pair per semantic "
+        "graph; padded-slot balance within one row block of perfect",
+    ),
+    Smoke(
+        name="session_sharded",
+        script="benchmarks/session_overhead.py",
+        args=("--smoke", "--sharded"),
+        bench="BENCH_session.json",
+        prefix="session_sharded_",
+        min_rows=1,
+        doc="a session compiled under the 8-way mesh is bit-identical "
+        "to the single-device legacy program with zero per-call Python "
+        "dispatch (--sharded fails loud if the mesh case were skipped)",
+    ),
+    Smoke(
+        name="serve_sharded",
+        script="benchmarks/serve_load.py",
+        args=("--smoke", "--sharded"),
+        bench="BENCH_serve.json",
+        prefix="serve_sharded_",
+        min_rows=1,
+        doc="the microbatching front-end over an 8-way mesh-sharded "
+        "session: block results bit-identical to the single-device "
+        "full forward, still one Python dispatch per block",
+    ),
+    Smoke(
+        name="chaos_sharded",
+        script="benchmarks/serve_chaos.py",
+        args=("--smoke", "--sharded"),
+        bench="BENCH_chaos.json",
+        prefix="chaos_sharded_",
+        min_rows=1,
+        doc="breaker trip -> fallback -> recovery with primary AND "
+        "fallback sessions 8-way mesh-sharded; the breaker swaps "
+        "executables, never meshes; parity bit-exact per flow",
+    ),
+    Smoke(
+        name="ego_sharded",
+        script="benchmarks/serve_ego.py",
+        args=("--smoke", "--sharded"),
+        bench="BENCH_ego.json",
+        prefix="ego_sharded_",
+        min_rows=1,
+        doc="ego queries against the 8-way mesh-sharded session (ego "
+        "forwards run replicated) match the sharded full forward "
+        "within 1e-5",
+    ),
+)
+
+SUITES = {
+    "tier1": (
+        "na_dispatch",
+        "session_overhead",
+        "serve_load",
+        "serve_chaos",
+        "sgb_scale",
+        "serve_ego",
+    ),
+    "multidevice": (
+        "na_sharded",
+        "session_sharded",
+        "serve_sharded",
+        "chaos_sharded",
+        "ego_sharded",
+    ),
+}
+
+
+def _select(suite: str, only: Sequence[str]) -> List[Smoke]:
+    by_name = {s.name: s for s in SMOKES}
+    names = list(only) if only else list(SUITES[suite])
+    unknown = [n for n in names if n not in by_name]
+    if unknown:
+        raise SystemExit(f"unknown smoke(s) {unknown}: {sorted(by_name)}")
+    return [by_name[n] for n in names]
+
+
+def _run(cmd: Sequence[str], env: dict) -> int:
+    print("+", " ".join(cmd), flush=True)
+    return subprocess.call(list(cmd), cwd=ROOT, env=env)
+
+
+def run_smoke(smoke: Smoke, stamp: str, env: dict) -> List[str]:
+    """Run one smoke + its guard; returns failure descriptions."""
+    failures: List[str] = []
+    print(f"::group::{smoke.name} — {smoke.doc}", flush=True)
+    try:
+        for pre in smoke.pre:
+            if _run([sys.executable, *shlex.split(pre)], env) != 0:
+                failures.append(f"{smoke.name}: pre-step failed: {pre}")
+                return failures
+        if _run([sys.executable, smoke.script, *smoke.args], env) != 0:
+            failures.append(f"{smoke.name}: smoke exited nonzero")
+            return failures
+        guard = [str(ROOT / smoke.bench), smoke.prefix]
+        guard += ["--min-rows", str(smoke.min_rows)]
+        guard += ["--newer-than", stamp, *smoke.guard_args]
+        print("+ check_emitted", " ".join(guard), flush=True)
+        if check_emitted.main(guard) != 0:
+            failures.append(
+                f"{smoke.name}: guard failed ({smoke.bench} lacks "
+                f"{smoke.min_rows} fresh {smoke.prefix}* rows)"
+            )
+        return failures
+    finally:
+        print("::endgroup::", flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--suite", choices=sorted(SUITES), default="tier1")
+    ap.add_argument(
+        "--only",
+        action="append",
+        default=[],
+        metavar="NAME",
+        help="run just these smokes (repeatable); overrides --suite",
+    )
+    ap.add_argument(
+        "--stamp",
+        default=".bench_stamp",
+        help="freshness marker touched before the first smoke; guards "
+        "only count BENCH rows stamped after it",
+    )
+    ap.add_argument("--list", action="store_true", help="print the table")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        by_name = {s.name: s for s in SMOKES}
+        for suite, names in sorted(SUITES.items()):
+            print(f"{suite}:")
+            for n in names:
+                s = by_name[n]
+                flags = " ".join(s.args)
+                floor = f"[{s.prefix}* >= {s.min_rows}]"
+                print(f"  {s.name:<18} {s.script} {flags:<18} {floor}")
+        return 0
+
+    selected = _select(args.suite, args.only)
+    stamp = str(ROOT / args.stamp)
+    Path(stamp).touch()
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src:."
+
+    failures: List[str] = []
+    for smoke in selected:
+        failures.extend(run_smoke(smoke, stamp, env))
+
+    if failures:
+        print(f"\n{len(failures)} smoke(s) FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+    else:
+        print(f"\nall {len(selected)} smokes passed their guards")
+    return len(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

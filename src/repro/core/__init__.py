@@ -7,9 +7,11 @@ Public API:
   * ``flows``     — staged / staged_pruned / fused execution flows
   * ``batch``     — ``GraphBatch``: the single model-input pytree
   * ``session``   — ``InferenceSession``: AOT-compiled serving entry
+  * ``ego``       — ``EgoPlanner``/``EgoBatch``: O(neighborhood) query path
   * ``pipeline``  — dataset → SGB → model assembly + training
   * ``models``    — HAN, RGAT, Simple-HGN behind the ``HGNNModel`` protocol
 """
 from repro.core.batch import GraphBatch, ModelSpec  # noqa: F401
+from repro.core.ego import EgoBatch, EgoPlanner  # noqa: F401
 from repro.core.flows import FlowConfig  # noqa: F401
 from repro.core.session import InferenceSession  # noqa: F401

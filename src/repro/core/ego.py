@@ -1,0 +1,507 @@
+"""Ego-subgraph extraction: O(neighborhood) target-batched inference.
+
+A serving query asks for logits of a handful of target vertices, but a
+full ``GraphBatch`` forward pays O(graph) regardless (the ROADMAP's
+vertex-centric frontier; TLV-HGNN in PAPERS.md). This module slices the
+L-hop metapath/relation neighborhood of a query's targets out of the
+(possibly mmap-backed, SGB-cache-loaded) bucketed layouts into a fixed
+padded :class:`EgoBatch`, so per-query work — host rows gathered, bytes
+read, and the compiled forward itself — scales with the neighborhood, not
+with ``|V|``.
+
+Shapes are quantized onto a small capacity ladder so the ego forward is
+servable by a handful of AOT executables instead of one per query:
+
+* per node type, the ego VERTEX capacity comes from
+  :func:`~repro.core.hetgraph.autotune_bucket_sizes` run over sampled
+  closure-size histograms — the same DP that picks degree buckets and
+  request-batch ladders (``serve.queueing.tune_capacities``);
+* per semantic graph, the padded NEIGHBOR width comes from the graph's
+  existing bucket capacities, so an ego batch whose widths all sit under
+  the pruner's K compiles straight through the paper's §4.3 bypass.
+
+A closure that outgrows the top ladder capacity is not an error: the
+planner reports it (``extract`` returns ``None``) and
+``InferenceSession.query_ego`` falls back to the full-forward
+``session.query`` path, counted in ``flows.DISPATCH["ego_fallback"]``.
+
+Exactness: with ``depth = L`` model layers, the closure keeps full
+neighborhoods for every vertex whose layer-``l`` activation (``l ≥ 1``)
+feeds a target — the sets ``B_L = targets``, ``B_{l-1} = B_l ∪ N_in(B_l)``
+— and admits the outermost frontier with masked (empty) rows, whose
+post-layer-0 garbage provably never reaches a target row. Graph-global
+quantities that a sliced neighborhood cannot reproduce (HAN's
+semantic-attention β) are injected via ``HGNNModel.ego_globals``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.hetgraph import (
+    BucketedSemanticGraph,
+    SemanticGraph,
+    autotune_bucket_sizes,
+    slice_rows,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EgoSgSpec:
+    """Static shape/identity of one semantic graph inside an ego batch."""
+
+    name: str
+    src_types: Tuple[str, ...]
+    dst_type: str
+    d_cap: int
+    num_edge_types: int
+
+
+@dataclasses.dataclass(frozen=True)
+class EgoSignature:
+    """The value-hashable static half of an :class:`EgoBatch`.
+
+    Unlike ``GraphBatch``'s identity-hashed static (one long-lived batch
+    per session), ego batches are built per query — so their static half
+    hashes BY VALUE and two extractions with the same capacities share one
+    compiled executable.
+    """
+
+    node_types: Tuple[str, ...]
+    caps: Tuple[int, ...]
+    label_type: str
+    out_capacity: int
+    sgs: Tuple[EgoSgSpec, ...]
+    global_keys: Tuple[str, ...]
+
+    @property
+    def total_nodes(self) -> int:
+        return int(sum(self.caps))
+
+    @property
+    def max_d_cap(self) -> int:
+        return max((s.d_cap for s in self.sgs), default=1)
+
+
+class EgoBatch:
+    """A fixed-shape ego neighborhood, duck-typed as a ``GraphBatch``.
+
+    Leaves (per-query data): per-type feature tables padded to the
+    signature's vertex capacities, per-semantic-graph padded-CSC tables
+    with EGO-LOCAL neighbor ids, ``out_rows`` mapping the query's idx
+    positions to ego-local label rows, and any injected ``ego_globals``.
+    Everything shape-bearing lives in the :class:`EgoSignature` aux data,
+    so ``model.apply`` traces once per signature, not once per query.
+
+    Semantic graphs are exposed as FLAT :class:`SemanticGraph` views whose
+    tables are array leaves — ``flows.run_aggregate_graph`` routes them
+    through its flat path, which accepts tracers (the bucketed path keys
+    device caches on graph identity and would retrace per query).
+    """
+
+    axes = None
+
+    def __init__(
+        self,
+        sig: EgoSignature,
+        features: Dict[str, jax.Array],
+        tables: Tuple[Tuple[jax.Array, jax.Array, jax.Array], ...],
+        out_rows: jax.Array,
+        ego_globals: Dict[str, jax.Array],
+    ):
+        self.sig = sig
+        self.features = features
+        self.tables = tables
+        self.out_rows = out_rows
+        self.ego_globals = ego_globals
+        self._sgs: Optional[Tuple[SemanticGraph, ...]] = None
+
+    # -- GraphBatch protocol ------------------------------------------------
+
+    @property
+    def node_types(self) -> Tuple[str, ...]:
+        return self.sig.node_types
+
+    @property
+    def label_type(self) -> str:
+        return self.sig.label_type
+
+    @property
+    def num_nodes(self) -> Dict[str, int]:
+        return dict(zip(self.sig.node_types, self.sig.caps))
+
+    @property
+    def offsets(self) -> Dict[str, int]:
+        out, off = {}, 0
+        for t, c in zip(self.sig.node_types, self.sig.caps):
+            out[t] = off
+            off += c
+        return out
+
+    @property
+    def total_nodes(self) -> int:
+        return self.sig.total_nodes
+
+    @property
+    def num_targets(self) -> int:
+        return self.num_nodes[self.sig.label_type]
+
+    @property
+    def dst_offset(self) -> int:
+        return self.offsets[self.sig.label_type]
+
+    @property
+    def sgs(self) -> Tuple[SemanticGraph, ...]:
+        if self._sgs is None:
+            self._sgs = tuple(
+                SemanticGraph(
+                    name=s.name,
+                    src_types=s.src_types,
+                    dst_type=s.dst_type,
+                    nbr_idx=nbr,
+                    nbr_mask=msk,
+                    edge_type=ety,
+                    num_edge_types=s.num_edge_types,
+                )
+                for s, (nbr, msk, ety) in zip(self.sig.sgs, self.tables)
+            )
+        return self._sgs
+
+    @property
+    def sg_by_dst(self) -> Dict[str, SemanticGraph]:
+        return {sg.dst_type: sg for sg in self.sgs}
+
+    def constrain(self, x, role: str):
+        """Ego forwards run replicated (mesh pinned to ``None``); sharding
+        annotations are a no-op."""
+        return x
+
+    # -- pytree -------------------------------------------------------------
+
+    def tree_flatten(self):
+        children = (self.features, self.tables, self.out_rows, self.ego_globals)
+        return children, self.sig
+
+    @classmethod
+    def tree_unflatten(cls, sig, children):
+        features, tables, out_rows, ego_globals = children
+        return cls(sig, features, tables, out_rows, ego_globals)
+
+
+jax.tree_util.register_pytree_node(
+    EgoBatch,
+    lambda b: b.tree_flatten(),
+    EgoBatch.tree_unflatten,
+)
+
+
+@dataclasses.dataclass
+class EgoStats:
+    """Host-side O(neighborhood) accounting, accumulated per extraction."""
+
+    queries: int = 0
+    fallbacks: int = 0
+    feature_rows: int = 0
+    adjacency_rows: int = 0
+    bytes_read: int = 0
+
+    def reset(self) -> None:
+        self.queries = 0
+        self.fallbacks = 0
+        self.feature_rows = 0
+        self.adjacency_rows = 0
+        self.bytes_read = 0
+
+    @property
+    def rows_per_query(self) -> float:
+        n = max(self.queries - self.fallbacks, 1)
+        return (self.feature_rows + self.adjacency_rows) / n
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "queries": self.queries,
+            "fallbacks": self.fallbacks,
+            "feature_rows": self.feature_rows,
+            "adjacency_rows": self.adjacency_rows,
+            "bytes_read": self.bytes_read,
+            "rows_per_query": round(self.rows_per_query, 2),
+        }
+
+
+class EgoPlanner:
+    """Extracts :class:`EgoBatch` es from one ``GraphBatch``'s layouts.
+
+    ``features`` may override the batch's (device) feature tables with
+    host-side arrays — e.g. ``data.sgb_cache.open_mmap_arrays`` views of a
+    dataset dump — in which case per-query feature rows are fancy-indexed
+    straight off disk and the full tables are never loaded (the bucketed
+    CSC tables loaded through the SGB cache are already mmap-backed, so
+    adjacency reads are out-of-core for free).
+
+    ``capacities`` (per-type vertex ladders) defaults to
+    ``autotune_bucket_sizes`` over closure sizes of ``sample`` random
+    queries with sizes cycling through ``sample_sizes`` — pass the serving
+    ``BatchPolicy.capacities`` as ``sample_sizes`` so the ladder is tuned
+    for real block shapes.
+    """
+
+    def __init__(
+        self,
+        batch,
+        depth: int,
+        features: Optional[Dict[str, np.ndarray]] = None,
+        capacities: Optional[Dict[str, Sequence[int]]] = None,
+        max_capacities: int = 4,
+        sample: int = 48,
+        sample_sizes: Sequence[int] = (1, 4),
+        seed: int = 0,
+    ):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.depth = int(depth)
+        self.node_types: Tuple[str, ...] = tuple(batch.node_types)
+        self.label_type: str = batch.label_type
+        self.sgs = tuple(batch.sgs)
+        self._offsets = dict(batch.offsets)
+        self._num_nodes = dict(batch.num_nodes)
+        self._starts = np.array(
+            [self._offsets[t] for t in self.node_types], dtype=np.int64
+        )
+        src = features if features is not None else batch.features
+        self.features = {t: np.asarray(src[t]) for t in self.node_types}
+        self._d_ladders = {
+            sg.name: (
+                tuple(sg.bucket_capacities)
+                if isinstance(sg, BucketedSemanticGraph)
+                else (int(sg.max_degree),)
+            )
+            for sg in self.sgs
+        }
+        self.stats = EgoStats()
+        if capacities is None:
+            capacities = self._tune_capacities(
+                sample, tuple(sample_sizes), max_capacities, seed
+            )
+        self.capacities = _equalize_ladders(capacities, self.node_types)
+
+    # -- capacity ladder ----------------------------------------------------
+
+    def _tune_capacities(
+        self, sample: int, sample_sizes: Tuple[int, ...], max_caps: int, seed: int
+    ) -> Dict[str, Tuple[int, ...]]:
+        """Per-type vertex ladders from sampled closure-size histograms —
+        the degree-bucket DP applied to ego sizes, mirroring the request
+        ladders in ``serve.queueing.tune_capacities``."""
+        rng = np.random.default_rng(seed)
+        n_lbl = int(self._num_nodes[self.label_type])
+        sizes = {t: [] for t in self.node_types}
+        for i in range(max(int(sample), 1)):
+            k = min(int(sample_sizes[i % len(sample_sizes)]), n_lbl)
+            idx = rng.integers(0, n_lbl, size=max(k, 1))
+            full, _ = self._closure(idx)
+            for t in self.node_types:
+                sizes[t].append(max(int(full[t].size), 1))
+        return {
+            t: autotune_bucket_sizes(np.asarray(sizes[t]), max_buckets=max_caps)
+            for t in self.node_types
+        }
+
+    # -- closure ------------------------------------------------------------
+
+    def _closure(
+        self, idx: np.ndarray, stats: Optional[EgoStats] = None
+    ) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+        """L-hop in-neighborhood closure of ``idx`` (label-type local ids).
+
+        Returns ``(full, inner)`` — per-type SORTED unique local ids.
+        ``full`` is every vertex the ego forward materializes; ``inner``
+        (the closure one hop short) is every vertex that keeps its FULL
+        neighborhood row — the outermost frontier gets masked rows, so
+        its post-input activations never reach a target (see module
+        docstring). Expansion is incremental: each hop only slices rows of
+        vertices discovered in the previous hop."""
+        seeds = np.unique(np.asarray(idx, dtype=np.int64))
+        full = {t: np.zeros(0, dtype=np.int64) for t in self.node_types}
+        full[self.label_type] = seeds
+        frontier: Dict[str, np.ndarray] = {self.label_type: seeds}
+        inner: Optional[Dict[str, np.ndarray]] = None
+        for hop in range(self.depth):
+            if hop == self.depth - 1:
+                inner = {t: v for t, v in full.items()}
+            if not frontier:
+                break
+            parts: Dict[str, list] = {t: [] for t in self.node_types}
+            for sg in self.sgs:
+                rows = frontier.get(sg.dst_type)
+                if rows is None or rows.size == 0:
+                    continue
+                nbr, msk, _, nbytes = slice_rows(sg, rows)
+                if stats is not None:
+                    stats.adjacency_rows += int(rows.size)
+                    stats.bytes_read += nbytes
+                g = nbr[msk].astype(np.int64)
+                if g.size == 0:
+                    continue
+                ti = np.searchsorted(self._starts, g, side="right") - 1
+                loc = g - self._starts[ti]
+                for k in np.unique(ti):
+                    parts[self.node_types[int(k)]].append(loc[ti == k])
+            frontier = {}
+            for t in self.node_types:
+                if not parts[t]:
+                    continue
+                cand = np.unique(np.concatenate(parts[t]))
+                fresh = np.setdiff1d(cand, full[t], assume_unique=True)
+                if fresh.size:
+                    full[t] = np.union1d(full[t], fresh)
+                    frontier[t] = fresh
+        if inner is None:
+            inner = {t: v for t, v in full.items()}
+        return full, inner
+
+    # -- extraction ---------------------------------------------------------
+
+    def _d_cap(self, sg, rows: np.ndarray) -> int:
+        """Tightest neighbor width on ``sg``'s bucket ladder covering the
+        selected rows — quantized so signatures stay few, and so widths
+        ≤ prune_k compile through the §4.3 bypass."""
+        ladder = self._d_ladders[sg.name]
+        if rows.size == 0:
+            return int(ladder[0])
+        if isinstance(sg, BucketedSemanticGraph):
+            bucket_of, _ = sg.row_lookup()
+            caps = sg.bucket_capacities
+            need = max(caps[int(b)] for b in np.unique(bucket_of[rows]))
+        else:
+            need = int(sg.max_degree)
+        for c in ladder:
+            if c >= need:
+                return int(c)
+        return int(ladder[-1])
+
+    def _remap(
+        self,
+        nbr: np.ndarray,
+        msk: np.ndarray,
+        verts: Dict[str, np.ndarray],
+        ego_off: Dict[str, int],
+    ) -> np.ndarray:
+        """GLOBAL neighbor ids -> ego-global ids (masked slots -> 0)."""
+        g = nbr.astype(np.int64).ravel()
+        m = msk.ravel()
+        out = np.zeros(g.shape, dtype=np.int64)
+        gi = g[m]
+        if gi.size:
+            ti = np.searchsorted(self._starts, gi, side="right") - 1
+            loc = gi - self._starts[ti]
+            res = np.empty(gi.shape, dtype=np.int64)
+            for k in np.unique(ti):
+                t = self.node_types[int(k)]
+                sel = ti == k
+                vt = verts[t]
+                pos = np.searchsorted(vt, loc[sel])
+                ok = (pos < vt.size) & (
+                    vt[np.minimum(pos, max(vt.size - 1, 0))] == loc[sel]
+                )
+                if not np.all(ok):
+                    raise AssertionError(
+                        f"ego closure missed {int((~ok).sum())} neighbors of "
+                        f"type {t!r} — internal invariant violated"
+                    )
+                res[sel] = ego_off[t] + pos
+            out[m] = res
+        return out.reshape(nbr.shape).astype(np.int32)
+
+    def extract(
+        self, idx, ego_globals: Optional[Dict[str, jax.Array]] = None
+    ) -> Optional[EgoBatch]:
+        """The ego batch for query ``idx``, or ``None`` when its closure
+        exceeds the top ladder capacity (caller falls back to the
+        full-graph forward)."""
+        idx = np.asarray(idx, dtype=np.int64).ravel()
+        st = self.stats
+        st.queries += 1
+        full, inner = self._closure(idx, stats=st)
+        need = {t: max(int(full[t].size), 1) for t in self.node_types}
+        n_levels = len(self.capacities[self.node_types[0]])
+        level = None
+        for k in range(n_levels):
+            if all(need[t] <= self.capacities[t][k] for t in self.node_types):
+                level = k
+                break
+        if level is None:
+            st.fallbacks += 1
+            return None
+        caps = {t: int(self.capacities[t][level]) for t in self.node_types}
+        verts = full
+        ego_off, off = {}, 0
+        for t in self.node_types:
+            ego_off[t] = off
+            off += caps[t]
+        feats = {}
+        for t in self.node_types:
+            tab = self.features[t]
+            rows = np.asarray(tab[verts[t]])
+            st.feature_rows += int(verts[t].size)
+            st.bytes_read += int(rows.nbytes)
+            padded = np.zeros((caps[t],) + tab.shape[1:], dtype=tab.dtype)
+            padded[: rows.shape[0]] = rows
+            feats[t] = padded
+        tables, specs = [], []
+        for sg in self.sgs:
+            dt = sg.dst_type
+            rows_in = inner[dt]
+            d_cap = self._d_cap(sg, rows_in)
+            nbr_t = np.zeros((caps[dt], d_cap), dtype=np.int32)
+            msk_t = np.zeros((caps[dt], d_cap), dtype=bool)
+            ety_t = np.zeros((caps[dt], d_cap), dtype=np.int32)
+            if rows_in.size:
+                nbr, msk, ety, nbytes = slice_rows(sg, rows_in, width=d_cap)
+                st.adjacency_rows += int(rows_in.size)
+                st.bytes_read += nbytes
+                pos = np.searchsorted(verts[dt], rows_in)
+                nbr_t[pos] = self._remap(nbr, msk, verts, ego_off)
+                msk_t[pos] = msk
+                ety_t[pos] = ety
+            tables.append((nbr_t, msk_t, ety_t))
+            specs.append(
+                EgoSgSpec(
+                    name=sg.name,
+                    src_types=tuple(sg.src_types),
+                    dst_type=dt,
+                    d_cap=d_cap,
+                    num_edge_types=int(sg.num_edge_types),
+                )
+            )
+        out_rows = np.searchsorted(verts[self.label_type], idx).astype(np.int32)
+        gl = dict(ego_globals or {})
+        sig = EgoSignature(
+            node_types=self.node_types,
+            caps=tuple(caps[t] for t in self.node_types),
+            label_type=self.label_type,
+            out_capacity=int(idx.size),
+            sgs=tuple(specs),
+            global_keys=tuple(sorted(gl)),
+        )
+        return EgoBatch(sig, feats, tuple(tables), out_rows, gl)
+
+
+def _equalize_ladders(
+    capacities: Dict[str, Sequence[int]], node_types: Tuple[str, ...]
+) -> Dict[str, Tuple[int, ...]]:
+    """Normalize per-type ladders to ascending int tuples of EQUAL length
+    (short ladders repeat their top capacity), so one ladder level indexes
+    a capacity for every type."""
+    norm = {}
+    for t in node_types:
+        if t not in capacities:
+            raise ValueError(f"capacity ladder missing node type {t!r}")
+        lad = tuple(sorted(int(c) for c in capacities[t]))
+        if not lad or any(c < 1 for c in lad):
+            raise ValueError(f"bad capacity ladder for {t!r}: {lad}")
+        norm[t] = lad
+    n = max(len(lad) for lad in norm.values())
+    return {t: lad + (lad[-1],) * (n - len(lad)) for t, lad in norm.items()}

@@ -63,9 +63,21 @@ from repro.distributed import sharding as dist
 #                   (InferenceSession.query). The serving amortization
 #                   evidence: a microbatching front-end serves N requests
 #                   with ~N/capacity of these, the serial loop pays N.
+#   ego_calls     — ego-subgraph executable dispatches
+#                   (InferenceSession.query_ego): the forward ran on the
+#                   extracted O(neighborhood) batch, not the full graph.
+#   ego_bypass    — ego dispatches whose per-graph neighbor capacity fit
+#                   under the pruner's K, so the compiled program routed
+#                   every semantic graph through the §4.3 pruner bypass.
+#   ego_fallback  — ego queries whose closure exceeded the top ego
+#                   capacity and fell back to the full-forward query path.
+#   ego_traces    — per-ego-signature AOT compiles (the ego analogue of
+#                   ``traces``; steady-state serving should stop paying
+#                   these once the signature ladder is warm).
 DISPATCH = {
     "graph_calls": 0, "bucket_calls": 0, "traces": 0, "sharded_calls": 0,
-    "mesh_lookups": 0, "query_calls": 0,
+    "mesh_lookups": 0, "query_calls": 0, "ego_calls": 0, "ego_bypass": 0,
+    "ego_fallback": 0, "ego_traces": 0,
 }
 
 # mesh-resolution scope stack, held in a ContextVar so concurrent traces

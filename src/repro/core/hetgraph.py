@@ -551,6 +551,9 @@ class BucketedSemanticGraph:
     _device: Dict = dataclasses.field(
         default_factory=dict, init=False, repr=False, compare=False
     )
+    _lookup: Optional[Tuple[np.ndarray, np.ndarray]] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
 
     @property
     def bucket_capacities(self) -> Tuple[int, ...]:
@@ -626,6 +629,21 @@ class BucketedSemanticGraph:
                 off += b.num_targets
             self._perm = perm
         return self._perm
+
+    def row_lookup(self) -> Tuple[np.ndarray, np.ndarray]:
+        """``(bucket_of, row_of)`` — two O(T) int32 arrays mapping a local
+        target id ``t`` to its bucket index and its row WITHIN that bucket,
+        so single rows can be addressed without densifying the flat view
+        (``_flat_arrays`` pays O(T × D_max) memory; this pays O(T) once and
+        per-row gathers after that). Cached."""
+        if self._lookup is None:
+            bucket_of = np.zeros(self.num_targets, dtype=np.int32)
+            row_of = np.zeros(self.num_targets, dtype=np.int32)
+            for i, b in enumerate(self.buckets):
+                bucket_of[b.targets] = i
+                row_of[b.targets] = np.arange(b.num_targets, dtype=np.int32)
+            self._lookup = (bucket_of, row_of)
+        return self._lookup
 
     def grouped(self, t_tile: int = 8, w: int = 8) -> GroupedBucketLayout:
         """The single-launch ragged-grid relayout (cached per tile shape)."""
@@ -715,6 +733,70 @@ def _pad_csc(
         etype = edge_type[order]
         ety.reshape(-1)[flat] = etype[keep].astype(np.int32, copy=False)
     return nbr, msk, ety
+
+
+def slice_rows(
+    sg: Union[SemanticGraph, BucketedSemanticGraph],
+    rows: np.ndarray,
+    width: int | None = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Gather the padded-CSC rows of ``rows`` (local target ids) WITHOUT
+    materializing the full ``(T, D_max)`` table.
+
+    Returns ``(nbr_idx, nbr_mask, edge_type, bytes_read)`` where the three
+    tables have shape ``(len(rows), width)`` (``width`` defaults to the
+    widest bucket capacity among the selected rows) and ``bytes_read``
+    counts the table bytes actually gathered — the O(neighborhood)
+    accounting the ego extractor reports.
+
+    Bucketed graphs are fancy-indexed per bucket via :meth:`row_lookup`, so
+    only the touched rows of the (possibly mmap-backed, zero-copy
+    SGB-cache-loaded) bucket tables are read; the densified ``_flat`` view
+    is never built. Neighbor ids stay GLOBAL — remapping to an ego-local id
+    space is the caller's job.
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    if isinstance(sg, SemanticGraph):
+        if width is None:
+            width = sg.max_degree
+        if width < sg.max_degree:
+            raise ValueError(
+                f"width {width} < flat max_degree {sg.max_degree}"
+            )
+        n = rows.shape[0]
+        nbr = np.zeros((n, width), dtype=np.int32)
+        msk = np.zeros((n, width), dtype=bool)
+        ety = np.zeros((n, width), dtype=np.int32)
+        d = sg.max_degree
+        nbr[:, :d] = sg.nbr_idx[rows]
+        msk[:, :d] = sg.nbr_mask[rows]
+        ety[:, :d] = sg.edge_type[rows]
+        return nbr, msk, ety, int(n) * d * 9
+    bucket_of, row_of = sg.row_lookup()
+    bsel = bucket_of[rows]
+    if width is None:
+        caps = sg.bucket_capacities
+        width = max((caps[b] for b in np.unique(bsel)), default=1)
+    n = rows.shape[0]
+    nbr = np.zeros((n, width), dtype=np.int32)
+    msk = np.zeros((n, width), dtype=bool)
+    ety = np.zeros((n, width), dtype=np.int32)
+    bytes_read = 0
+    for i, b in enumerate(sg.buckets):
+        hit = np.flatnonzero(bsel == i)
+        if hit.size == 0:
+            continue
+        if b.capacity > width:
+            raise ValueError(
+                f"rows span bucket capacity {b.capacity} > width {width}"
+            )
+        r = row_of[rows[hit]]
+        nbr[hit, : b.capacity] = b.nbr_idx[r]
+        msk[hit, : b.capacity] = b.nbr_mask[r]
+        ety[hit, : b.capacity] = b.edge_type[r]
+        # int32 nbr + int32 ety + bool mask per slot
+        bytes_read += int(r.size) * b.capacity * 9
+    return nbr, msk, ety, bytes_read
 
 
 def autotune_bucket_sizes(

@@ -85,6 +85,16 @@ class HGNNModel:
         """Final carry -> (num_targets, num_classes) logits."""
         raise NotImplementedError
 
+    def ego_globals(self, params, batch: GraphBatch, flow: FlowConfig):
+        """Graph-global quantities an ego-subgraph forward cannot recompute
+        from a sliced neighborhood alone, as a ``{name: array}`` dict (or
+        ``None``). Computed ONCE per weight version on the full batch and
+        injected into every :class:`~repro.core.ego.EgoBatch`, where layer
+        stages pick them up via ``batch.ego_globals``. RGAT / Simple-HGN are
+        fully row-local and need none; HAN overrides this with its
+        semantic-attention β (a mean over ALL targets)."""
+        return None
+
     def apply(
         self, params, batch: GraphBatch, flow: FlowConfig = FlowConfig()
     ) -> jax.Array:

@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import attention, semantic_fusion
+from repro.core import attention, flows, semantic_fusion
 from repro.core.batch import GraphBatch, ModelSpec
 from repro.core.flows import FlowConfig, run_aggregate_graph
 from repro.core.models.base import HGNNModel, LayerStep
@@ -76,9 +76,13 @@ class HAN(HGNNModel):
             return na
 
         def fuse(carry, h, zs):
-            return semantic_fusion.semantic_attention(
-                params["sem"], jnp.stack([zs[sg.name] for sg in batch.sgs])
-            )
+            stack = jnp.stack([zs[sg.name] for sg in batch.sgs])
+            injected = getattr(batch, "ego_globals", None) or {}
+            if "sem_beta" in injected:
+                # Ego forward: β is a mean over ALL targets, which a sliced
+                # neighborhood cannot reproduce — use the injected one.
+                return semantic_fusion.fuse_with_beta(injected["sem_beta"], stack)
+            return semantic_fusion.semantic_attention(params["sem"], stack)
 
         yield LayerStep(
             index=0,
@@ -91,3 +95,14 @@ class HAN(HGNNModel):
         return batch.constrain(
             carry @ params["out"]["w"] + params["out"]["b"], "logits"
         )
+
+    def ego_globals(self, params, batch: GraphBatch, flow: FlowConfig = FlowConfig()):
+        """Semantic-attention β over the FULL graph (one forward up to the
+        fuse stage, no readout). Cached per weight version by the caller."""
+        step = next(iter(self.layer_steps(params, batch, flow)))
+        with flows.mesh_scope(pinned=None):  # replicated; zero mesh lookups
+            carry = dict(batch.features)
+            h = step.project(carry)
+            zs = {name: fn(h) for name, fn in step.na}
+            stack = jnp.stack([zs[sg.name] for sg in batch.sgs])
+            return {"sem_beta": semantic_fusion.semantic_beta(params["sem"], stack)}

@@ -21,6 +21,7 @@ The returned ``HGNNTask`` serves inference two ways:
 from __future__ import annotations
 
 import dataclasses
+import os
 import warnings
 from typing import Dict, Optional, Sequence, Union
 

@@ -16,15 +16,33 @@ def init_semantic_attention(key, dim: int, hidden: int = 128):
     }
 
 
+def semantic_beta(params, zs: jax.Array) -> jax.Array:
+    """HAN's per-metapath attention weights β (P,) from zs (P, T, dim).
+
+    w_p = mean_v qᵀ tanh(W z_p,v + b);  β = softmax_p(w_p).
+
+    β is a mean over ALL targets — the one graph-global quantity in HAN's
+    forward. An ego-subgraph forward cannot recompute it from a sliced
+    neighborhood, so it is exposed separately: ``HAN.ego_globals`` computes
+    it once per weight version on the full batch and injects it into each
+    :class:`~repro.core.ego.EgoBatch` (see :func:`fuse_with_beta`).
+    """
+    e = jnp.tanh(zs @ params["w"] + params["b"]) @ params["q"]  # (P, T)
+    w = e.mean(axis=1)  # (P,)
+    return jax.nn.softmax(w)
+
+
+def fuse_with_beta(beta: jax.Array, zs: jax.Array) -> jax.Array:
+    """Fuse per-metapath embeddings zs (P, T, dim) with fixed β (P,)."""
+    return jnp.einsum("p,ptd->td", beta, zs)
+
+
 def semantic_attention(params, zs: jax.Array) -> jax.Array:
     """HAN's SF: zs (P, T, dim) per-metapath embeddings -> (T, dim).
 
     w_p = mean_v qᵀ tanh(W z_p,v + b);  β = softmax_p(w_p);  z = Σ β_p z_p.
     """
-    e = jnp.tanh(zs @ params["w"] + params["b"]) @ params["q"]  # (P, T)
-    w = e.mean(axis=1)  # (P,)
-    beta = jax.nn.softmax(w)
-    return jnp.einsum("p,ptd->td", beta, zs)
+    return fuse_with_beta(semantic_beta(params, zs), zs)
 
 
 def mean_fusion(zs: jax.Array) -> jax.Array:

@@ -57,6 +57,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import flows
 from repro.core.batch import GraphBatch
@@ -121,6 +122,12 @@ class InferenceSession:
         # capacity
         self._out_aval = self._output_aval(fn, params)
         self._gathers: dict = {}
+        # ego-subgraph serving state (enable_ego / query_ego): the attached
+        # planner, one compiled executable per EgoSignature, and the
+        # per-weight-version ego_globals cache
+        self._ego = None
+        self._ego_exes: dict = {}
+        self._ego_globals_cache = None
 
     def __call__(self, params) -> jax.Array:
         """(num_targets, num_classes) logits; one executable dispatch."""
@@ -189,6 +196,100 @@ class InferenceSession:
         for cap in capacities:
             self.compile_query(cap)
         return self
+
+    # -- ego-subgraph serving ---------------------------------------------
+    def enable_ego(self, planner=None, **planner_kw) -> "InferenceSession":
+        """Attach an :class:`~repro.core.ego.EgoPlanner` so ``query_ego``
+        can serve blocks at O(neighborhood). With no explicit ``planner``,
+        builds one from this session's batch with ``depth =
+        model.num_layers`` (extra kwargs — ``capacities``, ``features``
+        for out-of-core host tables, ``sample_sizes`` — pass through).
+        Returns self for chaining."""
+        if planner is None:
+            from repro.core.ego import EgoPlanner
+
+            depth = getattr(self.model, "num_layers", None)
+            if depth is None:
+                raise ValueError(
+                    "model exposes no num_layers; pass an EgoPlanner "
+                    "built with an explicit depth"
+                )
+            planner = EgoPlanner(self.graph_batch, depth=depth, **planner_kw)
+        self._ego = planner
+        return self
+
+    @property
+    def ego_planner(self):
+        """The attached planner (``None`` until ``enable_ego``)."""
+        return self._ego
+
+    def _ego_globals_for(self, params):
+        """``model.ego_globals`` cached per weight version (by parameter
+        tree identity — a ``WeightPlane``-routing front-end caches per
+        tenant version itself and passes the result in)."""
+        ent = self._ego_globals_cache
+        if ent is None or ent[0] is not params:
+            ent = (params, self.model.ego_globals(params, self.graph_batch, self.flow))
+            self._ego_globals_cache = ent
+        return ent[1]
+
+    def compile_ego(self, ego_batch, params):
+        """The AOT ego executable for ``ego_batch``'s signature: the model
+        forward over the O(neighborhood) batch fused with the
+        ``out_rows`` gather, traced ONCE per :class:`EgoSignature` (shapes
+        sit on the planner's capacity ladders, so the cache stays small)
+        and cached on the session. The mesh is pinned to ``None`` — ego
+        forwards run replicated; sharding pays off on full-graph tables,
+        not neighborhood-sized ones."""
+        exe = self._ego_exes.get(ego_batch.sig)
+        if exe is None:
+            flows.DISPATCH["ego_traces"] += 1
+            model, flow = self.model, self.flow
+
+            def fn(p, b):
+                with flows.mesh_scope(pinned=None):
+                    return model.apply(p, b, flow)[b.out_rows]
+
+            exe = jax.jit(fn).lower(params, ego_batch).compile()
+            self._ego_exes[ego_batch.sig] = exe
+        return exe
+
+    def query_ego(self, params, idx, ego_globals=_UNSET) -> jax.Array:
+        """Logits for one padded query block via the ego-subgraph path.
+
+        Same contract as :meth:`query` — ``idx`` is an int32 id vector,
+        the result its ``(len(idx), num_classes)`` logits rows — but the
+        forward runs on the extracted L-hop neighborhood of ``idx``
+        instead of the full graph, so per-call work scales with the query
+        neighborhood (parity vs. :meth:`query` is ≤ 1e-5, not bit-exact:
+        the ego program is a different XLA fusion over the same math).
+        Queries whose closure exceeds the planner's top capacity fall
+        back to :meth:`query` (``DISPATCH["ego_fallback"]``); ego batches
+        whose neighbor widths all fit under ``prune_k`` compile through
+        the paper's §4.3 pruner bypass (``DISPATCH["ego_bypass"]``)."""
+        if self._ego is None:
+            raise RuntimeError(
+                "ego path not enabled — call session.enable_ego() first"
+            )
+        idx = np.asarray(idx, dtype=np.int32)
+        if idx.ndim != 1:
+            raise ValueError(
+                f"query block must be a 1-D id vector, got shape {idx.shape}"
+            )
+        gl = self._ego_globals_for(params) if ego_globals is _UNSET else ego_globals
+        eb = self._ego.extract(idx, ego_globals=gl)
+        if eb is None:
+            flows.DISPATCH["ego_fallback"] += 1
+            return self.query(params, idx)
+        exe = self.compile_ego(eb, params)
+        flows.DISPATCH["ego_calls"] += 1
+        if (
+            self.flow.flow in ("fused", "fused_kernel")
+            and self.flow.prune_k is not None
+            and eb.sig.max_d_cap <= self.flow.prune_k
+        ):
+            flows.DISPATCH["ego_bypass"] += 1
+        return exe(params, eb)
 
     @property
     def out_shape(self) -> Tuple[int, ...]:

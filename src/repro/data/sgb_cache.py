@@ -346,6 +346,25 @@ def save_sgb(
     return path
 
 
+def open_mmap_arrays(
+    path: Union[str, "os.PathLike[str]"],
+) -> Dict[str, np.ndarray]:
+    """Read-only zero-copy views of every array in an uncompressed ``.npz``
+    — e.g. a dataset dump's ``features.npz``, or a file produced with
+    ``np.savez``. Fancy-indexing rows out of these views touches only the
+    pages those rows cover, so an :class:`~repro.core.ego.EgoPlanner`
+    handed them as its ``features`` gathers per-query feature rows
+    straight off disk WITHOUT loading the full tables (the same
+    out-of-core property the bucketed CSC tables get for free when loaded
+    through :func:`load_sgb`). Falls back to an eager ``np.load`` for
+    compressed archives."""
+    views = _npz_mmap_views(path)
+    if views is not None:
+        return views
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
 def load_sgb(
     path: Union[str, "os.PathLike[str]"],
 ) -> Tuple[List[BucketedSemanticGraph], Optional[List[str]]]:

@@ -253,6 +253,18 @@ class ServeFrontend:
                 continue
             for cap in policy.capacities:
                 sess.compile_query(cap)
+        # ego routing (policy.ego): primary blocks go through
+        # session.query_ego — O(neighborhood) forwards with per-block
+        # fallback to the full forward. The planner's ego-capacity ladder
+        # is tuned on THIS policy's block ladder so extraction sampling
+        # matches real block shapes. Graph-global injections
+        # (model.ego_globals, e.g. HAN's β) are cached per tenant weight
+        # VERSION — plane.version_token changes on publish, so a weight
+        # push invalidates the cached globals, stream mode included.
+        self._ego = bool(getattr(policy, "ego", False))
+        self._ego_globals: dict = {}
+        if self._ego and session.ego_planner is None:
+            session.enable_ego(sample_sizes=policy.capacities)
 
         self._pipe: "_queue.Queue[Optional[QueryBlock]]" = _queue.Queue(
             maxsize=self._PIPE_DEPTH
@@ -316,7 +328,25 @@ class ServeFrontend:
             self.faults.fire("dispatch", self._ctx(
                 "dispatch", tenant=blk.tenant, block=blk, engine=engine,
             ))
+        if self._ego and engine == "primary":
+            gl = self._ego_globals_for(blk.tenant, params)
+            return session.query_ego(params, blk.idx, ego_globals=gl)
         return session.query(params, blk.idx)
+
+    def _ego_globals_for(self, tenant: str, params):
+        """Per-tenant ``model.ego_globals`` cache keyed by the plane's
+        version token (stream-mode checkouts materialize FRESH buffers per
+        block, so caching by parameter identity would recompute the
+        full-graph globals pass every block)."""
+        tok = self.plane.version_token(tenant)
+        ent = self._ego_globals.get(tenant)
+        if ent is None or ent[0] != tok:
+            sess = self.session
+            ent = (tok, sess.model.ego_globals(
+                params, sess.graph_batch, sess.flow,
+            ))
+            self._ego_globals[tenant] = ent
+        return ent[1]
 
     def _dispatch_with_retry(self, blk: QueryBlock, session, engine: str):
         """Dispatch with capped exponential backoff on the injected clock

@@ -90,6 +90,22 @@ class WeightPlane:
             return jax.tree_util.tree_map(jax.device_put, params)
         return params
 
+    def version_token(self, tenant: str) -> int:
+        """Opaque token identifying ``tenant``'s currently-published
+        version — changes on every ``publish``, stable across ``checkout``
+        calls (which, in stream mode, return fresh buffers each time).
+        Lets callers cache per-version derived state, e.g. the serving
+        front-end's ego-globals cache. Raises
+        :class:`~repro.serve.health.TenantUnpublishedError` like
+        ``checkout``."""
+        try:
+            return id(self._versions[tenant])
+        except KeyError:
+            raise TenantUnpublishedError(
+                f"unknown tenant {tenant!r} (unpublished?); published: "
+                f"{sorted(self._versions)}"
+            ) from None
+
     def tenants(self) -> List[str]:
         return sorted(self._versions)
 

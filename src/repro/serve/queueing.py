@@ -163,11 +163,20 @@ class BatchPolicy:
     than this many requests already queued, ``submit`` sheds the new one
     with :class:`~repro.serve.health.QueueFullError` instead of letting
     the backlog (and every queued request's latency) grow without bound
-    (None = unbounded, the pre-robustness behavior)."""
+    (None = unbounded, the pre-robustness behavior).
+
+    ``ego=True`` routes primary-engine query blocks through the
+    ego-subgraph path (``session.query_ego``): the block's forward runs on
+    the extracted O(neighborhood) batch instead of the full graph, falling
+    back per block to the full forward when a closure outgrows the ego
+    capacity ladder. The front-end enables the session's planner (tuned on
+    this policy's ladder) at construction; the degradation/fallback engine
+    always serves full forwards."""
 
     capacities: Tuple[int, ...] = (1, 4, 8, 16)
     flush_timeout: float = 2e-3
     max_pending: Optional[int] = None
+    ego: bool = False
 
     def __post_init__(self):
         caps = tuple(int(c) for c in self.capacities)

@@ -1,0 +1,150 @@
+"""``benchmarks.common.emit`` <-> ``benchmarks/check_emitted.py`` contract.
+
+The guard's job: a CI smoke step fails unless its BENCH file holds
+enough FRESH rows with the right name prefix. Historically a row only
+counted when it carried ``us_per_call`` — rows emitting other numeric
+metrics (the ego bench's ``rows_per_query`` scaling row) were invisible
+to the guard, so a benchmark could silently stop emitting them. Pinned
+here: any numeric metric field counts, bools and bookkeeping keys do
+not, ``--metric`` demands one specific field, and ``--newer-than``
+filters rows whose ``ts`` stamp predates the marker.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "benchmarks"))
+
+import check_emitted  # noqa: E402
+from common import emit  # noqa: E402
+
+
+def _rows(path, rows):
+    path.write_text(json.dumps(rows))
+    return str(path)
+
+
+def _guard(*args):
+    """Run the guard exactly as CI does — as a script subprocess."""
+    script = str(ROOT / "benchmarks" / "check_emitted.py")
+    proc = subprocess.run(
+        [sys.executable, script, *args], capture_output=True, text=True
+    )
+    return proc.returncode, proc.stderr + proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# has_metric: what makes a row count
+# ---------------------------------------------------------------------------
+
+
+def test_any_numeric_metric_counts():
+    assert check_emitted.has_metric({"name": "x", "us_per_call": 3.5})
+    assert check_emitted.has_metric({"name": "x", "rows_per_query": 12})
+    assert check_emitted.has_metric({"name": "x", "bytes_read": 0})
+
+
+def test_bookkeeping_and_bools_do_not_count():
+    assert not check_emitted.has_metric({"name": "x", "derived": "a=1"})
+    assert not check_emitted.has_metric({"name": "x", "ts": 123.0})
+    assert not check_emitted.has_metric({"name": "x", "ok": True})
+    assert not check_emitted.has_metric({"name": "x", "note": "7"})
+
+
+def test_metric_flag_demands_specific_field():
+    row = {"name": "x", "rows_per_query": 12.0}
+    assert check_emitted.has_metric(row, "rows_per_query")
+    assert not check_emitted.has_metric(row, "us_per_call")
+
+
+# ---------------------------------------------------------------------------
+# main(): the CI guard end to end
+# ---------------------------------------------------------------------------
+
+
+def test_rows_without_us_per_call_satisfy_guard(tmp_path):
+    """The bugfix: a metric-bearing row with NO us_per_call counts."""
+    path = _rows(
+        tmp_path / "BENCH_x.json",
+        [{"name": "ego_scaling", "derived": "", "rows_per_query": 34.4}],
+    )
+    code, out = _guard(path, "ego_", "--min-rows", "1")
+    assert code == 0, out
+
+
+def test_metricless_rows_fail_guard(tmp_path):
+    path = _rows(
+        tmp_path / "BENCH_x.json",
+        [{"name": "ego_a", "derived": "looks=fine", "ok": True}],
+    )
+    code, out = _guard(path, "ego_", "--min-rows", "1")
+    assert code == 1 and "0 fresh rows" in out
+
+
+def test_metric_flag_end_to_end(tmp_path):
+    path = _rows(
+        tmp_path / "BENCH_x.json",
+        [{"name": "ego_a", "rows_per_query": 3.0}],
+    )
+    assert _guard(path, "ego_", "--metric", "rows_per_query")[0] == 0
+    assert _guard(path, "ego_", "--metric", "us_per_call")[0] == 1
+
+
+def test_newer_than_filters_stale_rows(tmp_path):
+    marker = tmp_path / "stamp"
+    marker.touch()
+    cutoff = os.path.getmtime(marker)
+    path = _rows(
+        tmp_path / "BENCH_x.json",
+        [
+            {"name": "ego_old", "us_per_call": 1.0, "ts": cutoff - 100},
+            {"name": "ego_new", "us_per_call": 1.0, "ts": cutoff + 100},
+        ],
+    )
+    args = (path, "ego_", "--newer-than", str(marker))
+    assert _guard(*args, "--min-rows", "1")[0] == 0
+    code, out = _guard(*args, "--min-rows", "2")
+    assert code == 1 and "stale" in out
+
+
+def test_missing_file_and_bad_json_fail(tmp_path):
+    assert _guard(str(tmp_path / "nope.json"), "x_")[0] == 1
+    bad = tmp_path / "BENCH_bad.json"
+    bad.write_text("{not json")
+    assert _guard(str(bad), "x_")[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# emit(): the writing half of the contract
+# ---------------------------------------------------------------------------
+
+
+def test_emit_requires_a_numeric_metric(tmp_path):
+    with pytest.raises(ValueError, match="no numeric metric"):
+        emit("row", None, "derived-only", path=tmp_path / "b.json")
+    with pytest.raises(TypeError, match="not numeric"):
+        emit("row", None, "", path=tmp_path / "b.json", flag=True)
+    with pytest.raises(TypeError, match="not numeric"):
+        emit("row", None, "", path=tmp_path / "b.json", note="3")
+
+
+def test_emit_rows_always_satisfy_the_guard(tmp_path):
+    """Whatever emit writes, check_emitted counts — with or without
+    us_per_call, replace-in-place by name, fresh ts stamps."""
+    path = tmp_path / "BENCH_y.json"
+    emit("ego_a", 12.5, "d", path=path)
+    emit("ego_b", None, "d", path=path, rows_per_query=9.25)
+    emit("ego_b", None, "d", path=path, rows_per_query=10.0)  # replaces
+    rows = json.loads(path.read_text())
+    assert [r["name"] for r in rows] == ["ego_a", "ego_b"]
+    assert rows[1]["rows_per_query"] == 10.0
+    assert all(check_emitted.has_metric(r) for r in rows)
+    assert all(abs(r["ts"] - time.time()) < 60 for r in rows)
+    code, out = _guard(str(path), "ego_", "--min-rows", "2")
+    assert code == 0, out

@@ -1,0 +1,265 @@
+"""Ego-subgraph extraction + ``session.query_ego`` contracts.
+
+The tentpole invariant: a query served through the ego path — extract
+the targets' L-hop closure, run the per-capacity AOT ego executable,
+gather ``out_rows`` — matches the full-graph forward slice within 1e-5
+for every model, while touching O(neighborhood) host rows. Edge cases
+pinned here:
+
+  * isolated target (zero in-degree on every semantic graph) — the
+    masked empty row aggregates to the same logits as the full graph;
+  * closure overflowing the top ladder capacity → counted full-forward
+    fallback, BIT-exact with ``session.query`` (same executable);
+  * all-bypass small-K blocks: every ego signature whose padded widths
+    sit under prune_k compiles through the §4.3 bypass;
+  * repeated signatures share one compiled executable (no per-query
+    retrace);
+  * ragged final block through the serving front-end's ego routing;
+  * out-of-core: extraction never densifies a bucketed layout's flat
+    view, and mmap'd feature views slot in as planner ``features``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import flows, pipeline
+from repro.core.ego import EgoPlanner
+from repro.core.flows import FlowConfig
+from repro.data import datasets, sgb_cache
+from repro.serve import (
+    BatchPolicy,
+    FakeClock,
+    InlineExecutor,
+    ServeFrontend,
+    make_workload,
+    run_workload,
+)
+
+TASKS = [("han", "acm"), ("rgat", "imdb"), ("simple_hgn", "dblp")]
+TOL = 1e-5
+
+
+def _reset():
+    for k in flows.DISPATCH:
+        flows.DISPATCH[k] = 0
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    return {
+        (m, d): pipeline.prepare(m, d, scale=0.04, max_degree=32, seed=0)
+        for m, d in TASKS
+    }
+
+
+def _ego_sess(task, flow=None):
+    sess = task.compile(flow or FlowConfig("fused", prune_k=8))
+    sess.enable_ego(seed=0, sample=16, sample_sizes=(1, 4))
+    return sess, np.asarray(sess(task.params))
+
+
+# ---------------------------------------------------------------------------
+# parity across models
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model,dataset", TASKS)
+def test_query_ego_matches_full_forward(tasks, model, dataset):
+    """Single- and multi-target ego queries match the full forward slice
+    within 1e-5 (different XLA fusion over the same math; HAN goes
+    through the injected-β ego_globals path), and dispatch accounting
+    holds: every query is one ego call or one counted fallback."""
+    task = tasks[(model, dataset)]
+    sess, full = _ego_sess(task)
+    rng = np.random.default_rng(0)
+    n = task.batch.num_targets
+    queries = [rng.integers(0, n, size=s) for s in (1, 1, 3, 3, 5)]
+    for idx in queries:  # warm: traces + HAN's eager ego_globals
+        sess.query_ego(task.params, idx)
+    _reset()
+    for idx in queries:
+        out = np.asarray(sess.query_ego(task.params, idx))
+        np.testing.assert_allclose(out, full[idx], rtol=0, atol=TOL)
+    d = flows.DISPATCH
+    assert d["ego_calls"] + d["ego_fallback"] == len(queries)
+    # steady state: no retraces, no eager NA dispatch, no mesh lookups
+    assert d["ego_traces"] == 0
+    assert d["graph_calls"] == 0 and d["mesh_lookups"] == 0
+
+
+def test_repeated_signature_shares_one_executable(tasks):
+    """Value-hashed EgoSignature: re-extracting the same query reuses the
+    compiled executable — zero new traces, identical results."""
+    task = tasks[("rgat", "imdb")]
+    sess, full = _ego_sess(task)
+    idx = np.array([3], dtype=np.int32)
+    a = np.asarray(sess.query_ego(task.params, idx))
+    traces = flows.DISPATCH["ego_traces"]
+    exes = len(sess._ego_exes)
+    b = np.asarray(sess.query_ego(task.params, idx))
+    assert flows.DISPATCH["ego_traces"] == traces
+    assert len(sess._ego_exes) == exes
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+
+
+def _isolate_vertex(g, v=0):
+    """Drop every edge incident to label-type vertex ``v``."""
+    edges = {}
+    for (src_t, rel, dst_t) in g.relations:
+        src, dst = g.edges[rel]
+        keep = np.ones(src.shape[0], dtype=bool)
+        if src_t == g.label_type:
+            keep &= src != v
+        if dst_t == g.label_type:
+            keep &= dst != v
+        edges[rel] = (src[keep], dst[keep])
+    return dataclasses.replace(g, edges=edges)
+
+
+def test_isolated_zero_in_degree_target():
+    """A target with NO incident edges: its ego closure is just itself,
+    every semantic-graph row fully masked — and the logits still match
+    the full forward (masked aggregation, not NaN garbage)."""
+    g, _, _ = datasets.resolve("imdb", scale=0.05, seed=0)
+    task = pipeline.prepare(
+        "rgat", _isolate_vertex(g, v=0), max_degree=32, seed=0
+    )
+    sess, full = _ego_sess(task)
+    for idx in ([0], [0, 5], [5, 0, 9]):
+        out = np.asarray(sess.query_ego(task.params, np.asarray(idx)))
+        assert np.all(np.isfinite(out))
+        np.testing.assert_allclose(out, full[idx], rtol=0, atol=TOL)
+
+
+def test_overflow_falls_back_to_full_forward(tasks):
+    """A closure larger than the top ladder capacity is not an error:
+    extract() reports it, query_ego serves the query through the
+    prewarmed full-forward query path — BIT-exact (same executable) —
+    and the fallback is counted."""
+    task = tasks[("rgat", "imdb")]
+    sess = task.compile(FlowConfig("fused", prune_k=8))
+    caps = {t: (1,) for t in task.batch.node_types}
+    sess.enable_ego(capacities=caps)
+    idx = np.array([2, 7, 11], dtype=np.int32)
+    assert sess.ego_planner.extract(idx) is None
+    _reset()
+    out = np.asarray(sess.query_ego(task.params, idx))
+    d = flows.DISPATCH
+    assert d["ego_fallback"] == 1 and d["ego_calls"] == 0
+    assert d["query_calls"] == 1
+    np.testing.assert_array_equal(out, np.asarray(sess.query(task.params, idx)))
+    # both the direct extract() probe above and query_ego's are counted
+    assert sess.ego_planner.stats.fallbacks == 2
+
+
+def test_small_k_blocks_all_bypass(tasks):
+    """prune_k >= every padded ego width (max_degree caps them): every
+    ego batch compiles through the §4.3 pruner bypass — counted per
+    dispatch — and parity still holds against the full forward (which
+    statically bypasses its own under-K buckets)."""
+    task = tasks[("simple_hgn", "dblp")]
+    sess, full = _ego_sess(task, FlowConfig("fused", prune_k=64))
+    _reset()
+    rng = np.random.default_rng(1)
+    queries = [rng.integers(0, task.batch.num_targets, size=2) for _ in range(4)]
+    for idx in queries:
+        out = np.asarray(sess.query_ego(task.params, idx))
+        np.testing.assert_allclose(out, full[idx], rtol=0, atol=TOL)
+    d = flows.DISPATCH
+    assert d["ego_calls"] > 0 and d["ego_bypass"] == d["ego_calls"]
+
+
+def test_enable_ego_requires_depth():
+    """Models without a ``num_layers`` depth can't define the L-hop
+    closure — enable_ego must fail loud, not extract garbage."""
+    task = pipeline.prepare("rgat", "imdb", scale=0.03, max_degree=32, seed=0)
+    sess = task.compile(FlowConfig("fused", prune_k=8))
+    sess.model = object()
+    with pytest.raises(ValueError, match="num_layers"):
+        sess.enable_ego()
+
+
+# ---------------------------------------------------------------------------
+# serving front-end routing
+# ---------------------------------------------------------------------------
+
+
+def test_frontend_ego_routing_ragged_final_block(tasks):
+    """BatchPolicy(ego=True) routes primary query blocks through
+    query_ego — including the ragged final flush block — with 1e-5
+    parity per request and zero full-graph forwards unless a block
+    overflows (then it's a counted fallback, not a crash)."""
+    task = tasks[("rgat", "imdb")]
+    sess = task.compile(FlowConfig("fused", prune_k=8))
+    full = np.asarray(sess(task.params))
+    policy = BatchPolicy(capacities=(1, 4, 8), flush_timeout=0.01, ego=True)
+    fe = ServeFrontend(
+        sess,
+        task.params,
+        policy=policy,
+        clock=FakeClock(),
+        executor=InlineExecutor(),
+    )
+    assert sess.ego_planner is not None  # enabled by the front-end
+    _reset()
+    # odd count + odd sizes: the final flush block is ragged
+    wl = make_workload(13, task.batch.num_targets, size_range=(1, 3), seed=3)
+    futs = run_workload(fe, wl)
+    for w, f in zip(wl, futs):
+        np.testing.assert_allclose(
+            f.result(0), full[w.targets], rtol=0, atol=TOL
+        )
+    d = flows.DISPATCH
+    assert fe.stats.completed == len(wl)
+    assert d["ego_calls"] + d["ego_fallback"] == fe.stats.blocks
+    assert d["query_calls"] == d["ego_fallback"]  # full fwd only on fallback
+
+
+# ---------------------------------------------------------------------------
+# out-of-core
+# ---------------------------------------------------------------------------
+
+
+def test_extraction_never_densifies_bucketed_layouts(tasks):
+    """Ego extraction slices bucket tables row-wise; it must never
+    trigger the (T, D_max) flat densification — that would be O(graph)
+    per planner and defeat mmap'd SGB loads."""
+    task = tasks[("rgat", "imdb")]
+    sess, full = _ego_sess(task)
+    for sg in task.batch.sgs:
+        sg._flat = None  # drop any view built by other tests
+    rng = np.random.default_rng(2)
+    for _ in range(4):
+        idx = rng.integers(0, task.batch.num_targets, size=2)
+        out = np.asarray(sess.query_ego(task.params, idx))
+        np.testing.assert_allclose(out, full[idx], rtol=0, atol=TOL)
+    assert all(sg._flat is None for sg in task.batch.sgs)
+
+
+def test_planner_runs_off_mmap_feature_views(tmp_path):
+    """EgoPlanner(features=open_mmap_arrays(dump/features.npz)): feature
+    rows gather straight off the on-disk dump, results identical to the
+    in-memory planner."""
+    g, _, _ = datasets.resolve("imdb", scale=0.05, seed=0)
+    datasets.save_hetgraph(g, tmp_path / "imdb")
+    views = sgb_cache.open_mmap_arrays(tmp_path / "imdb" / "features.npz")
+    task = pipeline.prepare("rgat", g, max_degree=32, seed=0)
+    for t in task.batch.node_types:
+        np.testing.assert_array_equal(views[t], np.asarray(g.features[t]))
+    sess = task.compile(FlowConfig("fused", prune_k=8))
+    sess.enable_ego(features=views, seed=0, sample=8)
+    full = np.asarray(sess(task.params))
+    mem = EgoPlanner(task.batch, depth=task.model.num_layers, seed=0, sample=8)
+    idx = np.array([1, 4], dtype=np.int32)
+    out = np.asarray(sess.query_ego(task.params, idx))
+    np.testing.assert_allclose(out, full[idx], rtol=0, atol=TOL)
+    eb_mm = sess.ego_planner.extract(idx)
+    eb_mem = mem.extract(idx)
+    for t in task.batch.node_types:
+        np.testing.assert_array_equal(eb_mm.features[t], eb_mem.features[t])

@@ -233,3 +233,36 @@ def test_prepare_presharding_under_mesh():
         bucket_sizes=(4, 8, 16),
     )
     assert all(not sg._sharded for sg in task2.sgs)
+
+
+def test_sharded_ego_query_parity(tasks):
+    """Ego-subgraph queries compose with an 8-way mesh-sharded session:
+    the session's full forward is sharded, ego forwards run REPLICATED
+    (the ego trace pins the mesh to None — zero mesh lookups while
+    serving) — and per-query logits match the sharded full forward
+    within 1e-5 (which is itself bit-identical to single-device, so
+    this bounds the same cross-program fusion drift as the
+    single-device ego tests)."""
+    task = tasks["rgat"]
+    with _mesh(8):
+        sess = task.compile(KERNEL)
+        assert sess.mesh_info is not None and sess.mesh_info[2] == 8
+        sess.enable_ego(seed=0, sample=8, sample_sizes=(1, 4))
+        full = np.asarray(sess(task.params))
+        rng = np.random.default_rng(5)
+        queries = [
+            rng.integers(0, task.batch.num_targets, size=s)
+            for s in (1, 2, 4, 4)
+        ]
+        for idx in queries:  # warm the ego signature ladder
+            sess.query_ego(task.params, idx)
+        _reset()
+        for k in ("ego_calls", "ego_bypass", "ego_fallback", "ego_traces"):
+            flows.DISPATCH[k] = 0
+        for idx in queries:
+            out = np.asarray(sess.query_ego(task.params, idx))
+            np.testing.assert_allclose(out, full[idx], rtol=0, atol=1e-5)
+        d = flows.DISPATCH
+        assert d["ego_calls"] + d["ego_fallback"] == len(queries)
+        assert d["ego_traces"] == 0, "ego retraced after warmup"
+        assert d["mesh_lookups"] == 0
