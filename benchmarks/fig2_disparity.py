@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import attention, pipeline
-from repro.core.flows import FlowConfig
 from repro.core.projection import project_features
 from benchmarks.common import emit
 

@@ -16,7 +16,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn

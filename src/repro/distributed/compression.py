@@ -13,7 +13,6 @@ single biggest t_collective lever for FSDP-less configs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

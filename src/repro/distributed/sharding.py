@@ -21,7 +21,6 @@ device path runs unchanged.
 from __future__ import annotations
 
 import contextlib
-import math
 import re
 from typing import Dict, Optional, Sequence, Tuple
 

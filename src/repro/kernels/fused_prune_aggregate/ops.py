@@ -323,4 +323,6 @@ def _sharded_fn(mesh, axis, use_rel, k_s, t_tile, w, slope, interpret):
 
     sharded, rep = P(axis), P()
     in_specs = (sharded,) * 6 + (rep, rep, rep) + ((rep,) if use_rel else ())
+    # repro: allow(jit-in-traced) -- lru_cache on the statics above means
+    # this wrapper is built once per (mesh, config), not per call
     return jax.jit(dist.shard_map_call(body, mesh, in_specs, P(axis)))

@@ -7,7 +7,6 @@
 """
 from __future__ import annotations
 
-import jax
 
 from repro.kernels.topk_decode_attention.kernel import topk_decode_attention_pallas
 from repro.kernels.topk_decode_attention.ref import (

@@ -1,7 +1,6 @@
 """Public wrapper: streaming top-K neighbor selection (the Pruner)."""
 from __future__ import annotations
 
-import jax
 
 from repro.kernels.topk_select.kernel import topk_select_pallas
 from repro.kernels.topk_select.ref import topk_select_ref

@@ -13,8 +13,7 @@ cycle position. Decode carries caches through the same scan as xs/ys.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

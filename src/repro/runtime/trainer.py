@@ -13,8 +13,6 @@ Production behaviors implemented (and exercised by tests):
 from __future__ import annotations
 
 import dataclasses
-import time
-from pathlib import Path
 from typing import Any, Callable, Optional
 
 import jax

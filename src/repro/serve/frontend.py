@@ -59,7 +59,7 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.serve.clock import Clock, InlineExecutor, SystemClock, ThreadExecutor
+from repro.serve.clock import Clock, SystemClock, ThreadExecutor
 from repro.serve.faults import FaultContext, FaultPlan
 from repro.serve.health import (
     CircuitBreaker,
@@ -438,6 +438,7 @@ class ServeFrontend:
             return
         blk, out, engine = staged
         try:
+            # repro: allow(serve-host-sync) -- THE sanctioned sync point
             rows = np.asarray(jax.block_until_ready(out))
         except Exception as exc:  # device failure surfaces at the sync
             self._fail_block(blk, exc)

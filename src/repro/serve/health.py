@@ -110,7 +110,7 @@ class SupervisorPolicy:
 
     def backoff(self, attempt: int) -> float:
         """Delay before retry ``attempt`` (0-based), capped exponential."""
-        return min(self.backoff_cap, self.backoff_base * (2.0 ** attempt))
+        return min(self.backoff_cap, self.backoff_base * (2.0**attempt))
 
 
 class CircuitBreaker:

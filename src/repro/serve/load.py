@@ -125,6 +125,7 @@ def run_serial(
         q.put(w.targets, w.tenant, clock.now(), policy.max_batch)
         (blk,) = q.drain(policy, clock.now(), force=True)
         params = plane.checkout(blk.tenant)
+        # repro: allow(serve-host-sync) -- serial baseline measures E2E
         rows = np.asarray(jax.block_until_ready(session.query(params, blk.idx)))
         outs.append(rows[: blk.n_valid])
         stats.on_block(blk, clock.now())

@@ -31,8 +31,10 @@ def param_avals(params) -> Tuple:
     the compatibility contract two versions must share to be served by
     one compiled executable."""
     leaves, treedef = jax.tree_util.tree_flatten(params)
+    # shape/dtype come from the aval — np.asarray here would pull every
+    # leaf to the host just to read metadata (found by repro-lint)
     return treedef, tuple(
-        (tuple(np.shape(l)), str(np.asarray(l).dtype)) for l in leaves
+        (tuple(np.shape(l)), str(np.result_type(l))) for l in leaves
     )
 
 
@@ -55,8 +57,13 @@ class WeightPlane:
                 f"this plane's executable: {_aval_diff(self._ref_avals, avals)}"
             )
         if self.stream:
+            # ONE host copy per leaf (np.array(np.asarray(l)) copied twice);
+            # the transfer itself is the point: stream mode pins versions
+            # on host so checkout can mint donatable device buffers
             params = jax.tree_util.tree_map(
-                lambda l: np.array(np.asarray(l)), params
+                # repro: allow(serve-host-sync) -- publish-time snapshot
+                lambda l: np.array(l),
+                params,
             )
         self._versions[tenant] = params
 

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -382,7 +382,7 @@ class RequestQueue:
         requests: List[Tuple[Request, slice]] = []
         off = 0
         for r in group:
-            idx[off: off + r.size] = r.targets
+            idx[off : off + r.size] = r.targets
             requests.append((r, slice(off, off + r.size)))
             off += r.size
         idx[off:] = idx[0]  # pad with a valid id; rows are discarded

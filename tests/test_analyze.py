@@ -1,0 +1,637 @@
+"""repro-lint (``tools/analyze``) contract tests.
+
+Every rule family gets one known-bad fixture it must flag and one
+known-clean fixture it must stay silent on — the clean twins encode the
+repo's sanctioned idioms (trace-time counter keys, metadata branches on
+refs, ``cond.wait_for`` on the held condition, the build-time jit) so a
+rule that over-triggers fails here before it sprays false positives
+over the tree. Plus: pragma suppression (inline and standalone),
+baseline round-trip semantics, and the CLI exit-code contract CI relies
+on.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from tools.analyze import run_analysis  # noqa: E402
+from tools.analyze.registry import (  # noqa: E402
+    fingerprints,
+    load_baseline,
+    new_findings,
+    rule_names,
+    save_baseline,
+)
+
+
+def analyze(tmp_path, files):
+    """Write a fixture tree and return its unsuppressed findings."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return run_analysis(tmp_path, sorted(files))
+
+
+def rules_fired(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# trace purity
+# ---------------------------------------------------------------------------
+
+
+def test_jit_in_loop_flags_per_iteration_wrap(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/x.py": """
+            import jax
+
+            def build(fns):
+                outs = []
+                for f in fns:
+                    outs.append(jax.jit(f))
+                return outs
+            """
+        },
+    )
+    assert rules_fired(findings) == ["jit-in-loop"]
+
+
+def test_jit_at_build_time_is_clean(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/x.py": """
+            import jax
+
+            def build(fn):
+                return jax.jit(fn, static_argnames=("cfg",))
+            """
+        },
+    )
+    assert findings == []
+
+
+def test_jit_created_inside_traced_code_flags(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/x.py": """
+            import jax
+
+            @jax.jit
+            def outer(x):
+                inner = jax.jit(lambda y: y + 1)
+                return inner(x)
+            """
+        },
+    )
+    assert "jit-in-traced" in rules_fired(findings)
+
+
+def test_traced_branch_flags_python_if_on_jnp_value(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/x.py": """
+            import jax
+            import jax.numpy as jnp
+
+            @jax.jit
+            def f(x):
+                if jnp.any(x > 0):
+                    return x
+                return -x
+            """
+        },
+    )
+    assert rules_fired(findings) == ["traced-python-branch"]
+
+
+def test_traced_branch_silent_on_where_and_host_ifs(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/x.py": """
+            import jax
+            import jax.numpy as jnp
+
+            @jax.jit
+            def f(x, flip=False):
+                if flip:  # host-static branch: fine
+                    x = -x
+                return jnp.where(x > 0, x, -x)
+            """
+        },
+    )
+    assert findings == []
+
+
+def test_unhashable_static_closure_flags(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/x.py": """
+            import jax
+
+            def make():
+                cfg = [1, 2, 3]
+
+                def fn(y):
+                    return y * cfg[0]
+
+                return jax.jit(fn)
+            """
+        },
+    )
+    assert "jit-unhashable-static" in rules_fired(findings)
+
+
+def test_tuple_closure_is_clean(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/x.py": """
+            import jax
+
+            def make():
+                cfg = (1, 2, 3)
+
+                def fn(y):
+                    return y * cfg[0]
+
+                return jax.jit(fn)
+            """
+        },
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# dispatch-counter discipline
+# ---------------------------------------------------------------------------
+
+FLOWS_FIXTURE = """
+DISPATCH = {"graph_calls": 0, "traces": 0}
+"""
+
+
+def test_dispatch_key_typo_flags_cross_module(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/core/flows.py": FLOWS_FIXTURE,
+            "src/repro/other.py": """
+            from repro.core import flows
+
+            def record():
+                flows.DISPATCH["graph_callz"] += 1
+            """,
+        },
+    )
+    assert rules_fired(findings) == ["dispatch-unknown-key"]
+
+
+def test_declared_dispatch_key_is_clean(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/core/flows.py": FLOWS_FIXTURE,
+            "src/repro/other.py": """
+            from repro.core import flows
+
+            def record():
+                flows.DISPATCH["graph_calls"] += 1
+            """,
+        },
+    )
+    assert findings == []
+
+
+def test_runtime_counter_in_traced_code_flags(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/core/flows.py": """
+            import jax
+
+            DISPATCH = {"graph_calls": 0, "traces": 0}
+
+            @jax.jit
+            def f(x):
+                DISPATCH["graph_calls"] += 1
+                return x
+            """
+        },
+    )
+    assert rules_fired(findings) == ["dispatch-in-traced"]
+
+
+def test_trace_time_counter_keys_are_exempt(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/core/flows.py": """
+            import jax
+
+            DISPATCH = {"graph_calls": 0, "traces": 0}
+
+            @jax.jit
+            def f(x):
+                DISPATCH["traces"] += 1
+                return x
+            """
+        },
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel hygiene (scoped to kernels/*/kernel.py bodies)
+# ---------------------------------------------------------------------------
+
+
+def _kernel_file(body):
+    return (
+        "import jax.numpy as jnp\n"
+        "from jax.experimental import pallas as pl\n"
+        "\n"
+        + textwrap.dedent(body)
+        + "\n\ndef run(x):\n    return pl.pallas_call(_kern, out_shape=x)(x)\n"
+    )
+
+
+def test_kernel_host_callback_flags_print(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/kernels/foo/kernel.py": _kernel_file(
+                """
+                def _kern(x_ref, o_ref):
+                    print("dbg")
+                    o_ref[...] = x_ref[...]
+                """
+            )
+        },
+    )
+    assert rules_fired(findings) == ["kernel-host-callback"]
+
+
+def test_kernel_ref_value_branch_flags(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/kernels/foo/kernel.py": _kernel_file(
+                """
+                def _kern(x_ref, o_ref):
+                    if x_ref[0] > 0:
+                        o_ref[...] = x_ref[...]
+                """
+            )
+        },
+    )
+    assert rules_fired(findings) == ["kernel-ref-branch"]
+
+
+def test_kernel_foreign_call_flags(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/kernels/foo/kernel.py": _kernel_file(
+                """
+                def _kern(x_ref, o_ref):
+                    o_ref[...] = helper_lib.transform(x_ref[...])
+                """
+            )
+        },
+    )
+    assert rules_fired(findings) == ["kernel-foreign-call"]
+
+
+def test_sanctioned_kernel_idioms_are_clean(tmp_path):
+    """pl.when, jnp/lax ops, module helpers, and static *metadata*
+    branches on refs (``x_ref.shape``) are the blessed surface."""
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/kernels/foo/kernel.py": _kernel_file(
+                """
+                def _scale(v):
+                    return v * 2.0
+
+                def _kern(x_ref, o_ref):
+                    if x_ref.shape[-1] >= 4:  # static guard: metadata
+                        o_ref[...] = _scale(jnp.exp(x_ref[...]))
+
+                    @pl.when(x_ref.shape[0] > 1)
+                    def _tail():
+                        o_ref[0] = x_ref[0]
+                """
+            )
+        },
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# serve concurrency (scoped to src/repro/serve/)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_wallclock_flags_raw_time(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/serve/bad.py": """
+            import time
+
+            def now():
+                return time.monotonic()
+            """
+        },
+    )
+    assert rules_fired(findings) == ["serve-wallclock"]
+
+
+def test_wallclock_outside_serve_is_clean(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/runtime/ok.py": """
+            import time
+
+            def now():
+                return time.monotonic()
+            """
+        },
+    )
+    assert findings == []
+
+
+def test_blocking_call_under_lock_flags(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/serve/bad.py": """
+            import threading
+
+            class S:
+                def __init__(self):
+                    self._lock = threading.Lock()
+
+                def run_once(self, fut):
+                    with self._lock:
+                        return fut.result()
+            """
+        },
+    )
+    assert rules_fired(findings) == ["serve-lock-held-blocking"]
+
+
+def test_cond_wait_on_held_condition_is_clean(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/serve/ok.py": """
+            import threading
+
+            class S:
+                def __init__(self):
+                    self._cond = threading.Condition()
+
+                def park(self, ready):
+                    with self._cond:
+                        self._cond.wait_for(ready)
+            """
+        },
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# host-sync in hot paths
+# ---------------------------------------------------------------------------
+
+
+def test_host_sync_on_jax_value_flags(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/serve/bad.py": """
+            import jax.numpy as jnp
+            import numpy as np
+
+            def hot(x):
+                y = jnp.exp(x)
+                return np.asarray(y)
+            """
+        },
+    )
+    assert rules_fired(findings) == ["serve-host-sync"]
+
+
+def test_host_sync_on_numpy_value_is_clean(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/serve/ok.py": """
+            import numpy as np
+
+            def cold(n):
+                y = np.ones(n)
+                return np.asarray(y), float("nan")
+            """
+        },
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+# ---------------------------------------------------------------------------
+
+
+def test_inline_pragma_suppresses(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/serve/ok.py": """
+            import jax.numpy as jnp
+            import numpy as np
+
+            def hot(x):
+                y = jnp.exp(x)
+                return np.asarray(y)  # repro: allow(serve-host-sync)
+            """
+        },
+    )
+    assert findings == []
+
+
+def test_standalone_pragma_spans_continuation_comments(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/serve/ok.py": """
+            import jax.numpy as jnp
+            import numpy as np
+
+            def hot(x):
+                y = jnp.exp(x)
+                # repro: allow(serve-host-sync) -- measurement endpoint;
+                # the sync IS the thing being timed here
+                return np.asarray(y)
+            """
+        },
+    )
+    assert findings == []
+
+
+def test_pragma_for_other_rule_does_not_suppress(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/serve/bad.py": """
+            import jax.numpy as jnp
+            import numpy as np
+
+            def hot(x):
+                y = jnp.exp(x)
+                return np.asarray(y)  # repro: allow(serve-wallclock)
+            """
+        },
+    )
+    assert rules_fired(findings) == ["serve-host-sync"]
+
+
+def test_wildcard_pragma_suppresses_everything(tmp_path):
+    findings = analyze(
+        tmp_path,
+        {
+            "src/repro/serve/ok.py": """
+            import time
+
+            def now():
+                return time.monotonic()  # repro: allow(*)
+            """
+        },
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+# ---------------------------------------------------------------------------
+
+BAD_SERVE = {
+    "src/repro/serve/bad.py": """
+    import time
+
+    def a():
+        return time.monotonic()
+    """
+}
+
+
+def test_baseline_round_trip_grandfathers_and_catches_new(tmp_path):
+    findings = analyze(tmp_path, BAD_SERVE)
+    assert len(findings) == 1
+    bl_path = tmp_path / "baseline.json"
+    save_baseline(bl_path, findings)
+    baseline = load_baseline(bl_path)
+    assert baseline == fingerprints(findings)
+    # grandfathered: nothing new
+    assert new_findings(findings, baseline) == []
+    # a second, identical occurrence beyond the baselined count IS new
+    (tmp_path / "src/repro/serve/bad.py").write_text(
+        textwrap.dedent(
+            """
+            import time
+
+            def a():
+                return time.monotonic()
+
+            def b():
+                return time.monotonic()
+            """
+        )
+    )
+    findings2 = run_analysis(tmp_path, ["src/repro/serve/bad.py"])
+    assert len(findings2) == 2
+    fresh = new_findings(findings2, baseline)
+    assert len(fresh) == 1
+    # content-keyed, not line-keyed: pure line drift stays grandfathered
+    assert fresh[0].line > findings[0].line
+
+
+def test_baseline_is_line_drift_tolerant(tmp_path):
+    findings = analyze(tmp_path, BAD_SERVE)
+    baseline = fingerprints(findings)
+    shifted = {
+        "src/repro/serve/bad.py": """
+        import time
+
+        PAD = 1  # pushes the finding to a different line
+
+
+        def a():
+            return time.monotonic()
+        """
+    }
+    findings2 = analyze(tmp_path, shifted)
+    assert findings2[0].line != findings[0].line
+    assert new_findings(findings2, baseline) == []
+
+
+# ---------------------------------------------------------------------------
+# CLI (subprocess, exactly as CI runs it)
+# ---------------------------------------------------------------------------
+
+
+def _cli(*args):
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analyze", *args],
+        capture_output=True,
+        text=True,
+        cwd=ROOT,
+    )
+    return proc.returncode, proc.stdout, proc.stderr
+
+
+def test_cli_list_rules_documents_catalog():
+    code, out, _ = _cli("--list-rules")
+    assert code == 0
+    for name in rule_names():
+        assert name in out
+
+
+def test_cli_exit_code_counts_new_findings(tmp_path):
+    tree = tmp_path / "tree"
+    (tree / "src/repro/serve").mkdir(parents=True)
+    (tree / "src/repro/serve/bad.py").write_text(
+        "import time\n\n\ndef a():\n    return time.monotonic()\n"
+    )
+    bl = tmp_path / "bl.json"
+    args = ("--root", str(tree), "--baseline", str(bl), "src")
+    code, out, _ = _cli(*args)
+    assert code == 1 and "serve-wallclock" in out
+    code, out, _ = _cli("--format", "github", *args)
+    assert code == 1 and out.startswith("::error file=")
+    # grandfather, then the same tree is green
+    assert _cli("--write-baseline", *args)[0] == 0
+    assert json.loads(bl.read_text())["version"] == 1
+    assert _cli(*args)[0] == 0
+
+
+def test_cli_is_clean_on_this_repo():
+    """The committed tree + committed baseline must stay green — this is
+    the same invocation the CI lint job runs."""
+    code, out, err = _cli()
+    assert code == 0, out + err

@@ -1,6 +1,5 @@
 """Checkpoint layer: roundtrip, atomicity, GC, resume semantics."""
 import json
-import shutil
 
 import jax
 import jax.numpy as jnp

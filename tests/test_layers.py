@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.configs.base import ModelConfig, MoEConfig
 from repro.layers import moe as moe_mod
 from repro.layers import rglru, rwkv
 

@@ -23,7 +23,7 @@ import numpy as np
 import pytest
 
 from repro.core import flows, pipeline
-from repro.core.batch import GraphBatch, ModelSpec
+from repro.core.batch import ModelSpec
 from repro.core.flows import FlowConfig
 from repro.core.models import MODELS, get_entry
 from repro.kernels.fused_prune_aggregate import kernel as fpa_kernel

@@ -20,7 +20,6 @@ import pytest
 
 from repro.core import attention, flows, hetgraph, pipeline
 from repro.core.flows import FlowConfig, run_aggregate_graph
-from repro.distributed import sharding as dist
 from repro.kernels.fused_prune_aggregate import kernel as fpa_kernel
 
 pytestmark = pytest.mark.skipif(

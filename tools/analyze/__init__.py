@@ -1,0 +1,56 @@
+"""repro-lint: AST contract checks for this repo's invariants.
+
+Run ``python -m tools.analyze`` from the repo root; see
+``tools/README.md`` for the rule catalog, pragma syntax, and baseline
+workflow.
+"""
+
+from pathlib import Path
+from typing import List, Optional
+
+import tools.analyze.rules  # noqa: F401  (registers every rule)
+from tools.analyze.cache import Module, discover
+from tools.analyze.context import AnalysisContext
+from tools.analyze.registry import (
+    Finding,
+    fingerprints,
+    iter_rules,
+    load_baseline,
+    new_findings,
+    rule_names,
+    save_baseline,
+)
+
+__all__ = [
+    "AnalysisContext",
+    "Finding",
+    "Module",
+    "discover",
+    "fingerprints",
+    "iter_rules",
+    "load_baseline",
+    "new_findings",
+    "rule_names",
+    "run_analysis",
+    "save_baseline",
+]
+
+DEFAULT_PATHS = ["src/repro", "tools"]
+
+
+def run_analysis(root: Path, paths: Optional[List[str]] = None) -> List[Finding]:
+    """All unsuppressed findings for the tree under ``root``.
+
+    The call graph spans every loaded module, so reachability crosses
+    module boundaries; pragma-suppressed findings are already dropped.
+    """
+    modules = discover(root, paths or DEFAULT_PATHS)
+    ctx = AnalysisContext(modules)
+    findings: List[Finding] = []
+    for rule in iter_rules():
+        for module in modules:
+            for f in rule.check(module, ctx):
+                if not module.allows(f.line, f.rule):
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings

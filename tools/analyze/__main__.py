@@ -1,0 +1,107 @@
+"""CLI for repro-lint.
+
+Exit code is the number of NEW findings (capped at 100) — findings not
+grandfathered by the committed baseline and not pragma-suppressed — so
+the CI lint step fails exactly when a PR introduces a violation.
+
+    python -m tools.analyze                      # check src/repro + tools
+    python -m tools.analyze --list-rules         # document active rules
+    python -m tools.analyze --format github      # CI annotations
+    python -m tools.analyze --write-baseline     # grandfather the present
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.analyze import (
+    DEFAULT_PATHS,
+    iter_rules,
+    load_baseline,
+    new_findings,
+    run_analysis,
+    save_baseline,
+)
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyze", description=__doc__.splitlines()[0]
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        default=None,
+        help=f"files/dirs to check, relative to --root (default: {DEFAULT_PATHS})",
+    )
+    ap.add_argument(
+        "--root",
+        type=Path,
+        default=REPO_ROOT,
+        help="analysis root paths are resolved against (default: repo root)",
+    )
+    ap.add_argument(
+        "--format",
+        choices=("text", "github"),
+        default="text",
+        help="finding output style (github = workflow annotations)",
+    )
+    ap.add_argument(
+        "--baseline",
+        type=Path,
+        default=None,
+        help="baseline file (default: tools/analyze/baseline.json under --root)",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="grandfather every current finding into the baseline and exit 0",
+    )
+    ap.add_argument(
+        "--list-rules",
+        action="store_true",
+        help="print the active rule table and exit",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        rules = iter_rules()
+        width = max(len(r.name) for r in rules)
+        print(f"repro-lint: {len(rules)} active rules\n")
+        for r in rules:
+            print(f"  {r.name:<{width}}  {r.summary}")
+        return 0
+
+    baseline_path = args.baseline or (
+        args.root / "tools" / "analyze" / "baseline.json"
+    )
+    findings = run_analysis(args.root, args.paths or None)
+
+    if args.write_baseline:
+        save_baseline(baseline_path, findings)
+        print(
+            f"repro-lint: baselined {len(findings)} finding(s) -> "
+            f"{baseline_path}",
+            file=sys.stderr,
+        )
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    fresh = new_findings(findings, baseline)
+    for f in fresh:
+        print(f.github() if args.format == "github" else f.text())
+    grandfathered = len(findings) - len(fresh)
+    print(
+        f"repro-lint: {len(fresh)} new finding(s), "
+        f"{grandfathered} baselined",
+        file=sys.stderr,
+    )
+    return min(len(fresh), 100)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,131 @@
+"""Shared module cache: parse every file once, index pragmas.
+
+The analyzer walks the tree a single time and hands every rule the same
+parsed ``Module`` objects — rules never re-read or re-parse source. A
+``Module`` carries the AST, the raw source lines (for snippets and
+fingerprints), and the ``# repro: allow(<rule>)`` pragma index.
+
+Pragma forms::
+
+    DISPATCH["graph_calls"] += 1  # repro: allow(dispatch-in-traced) -- why
+    # repro: allow(serve-wallclock) -- the clock seam itself
+    dt = time.monotonic()
+
+An inline pragma suppresses findings on its own line. A standalone
+pragma (the comment is the whole line) also suppresses the line below
+it, so multi-clause statements can carry an explanation without blowing
+the line length. ``allow(*)`` suppresses every rule.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, FrozenSet, List, Optional
+
+PRAGMA_RE = re.compile(r"#\s*repro:\s*allow\(([^)]*)\)")
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file plus its pragma index."""
+
+    path: Path  # absolute
+    rel: str  # posix path relative to the analysis root
+    source: str
+    lines: List[str]
+    tree: ast.Module
+    # line number -> rule names allowed there ("*" = all rules)
+    pragmas: Dict[int, FrozenSet[str]]
+
+    def allows(self, line: int, rule: str) -> bool:
+        rules = self.pragmas.get(line)
+        return bool(rules) and ("*" in rules or rule in rules)
+
+    def snippet(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+
+def _parse_pragmas(source: str, lines: List[str]) -> Dict[int, FrozenSet[str]]:
+    """Map line numbers to the rule names a pragma allows there.
+
+    Uses the tokenizer (not a text scan) so pragma-looking strings inside
+    string literals don't count.
+    """
+    out: Dict[int, FrozenSet[str]] = {}
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        tokens = []
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = PRAGMA_RE.search(tok.string)
+        if not m:
+            continue
+        rules = frozenset(
+            r.strip() for r in re.split(r"[,\s]+", m.group(1)) if r.strip()
+        )
+        if not rules:
+            continue
+        line = tok.start[0]
+        out[line] = out.get(line, frozenset()) | rules
+        text = lines[line - 1] if line <= len(lines) else ""
+        if text.lstrip().startswith("#"):
+            # standalone pragma: applies to the statement below, skipping
+            # any continuation comment lines of the explanation
+            nxt = line + 1
+            while nxt <= len(lines) and lines[nxt - 1].lstrip().startswith("#"):
+                nxt += 1
+            out[nxt] = out.get(nxt, frozenset()) | rules
+    return out
+
+
+def load_module(path: Path, root: Path) -> Optional[Module]:
+    """Parse one file; returns None when it cannot be read or parsed.
+
+    Unparseable files are the ruff/E9 tier's problem, not this
+    analyzer's — skipping keeps rule runs total.
+    """
+    try:
+        source = path.read_text(encoding="utf-8")
+        tree = ast.parse(source, filename=str(path))
+    except (OSError, SyntaxError, ValueError):
+        return None
+    lines = source.splitlines()
+    rel = path.resolve().relative_to(root.resolve()).as_posix()
+    return Module(
+        path=path,
+        rel=rel,
+        source=source,
+        lines=lines,
+        tree=tree,
+        pragmas=_parse_pragmas(source, lines),
+    )
+
+
+def discover(root: Path, paths: List[str]) -> List[Module]:
+    """Load every ``*.py`` under ``paths`` (files or directories), sorted."""
+    seen: Dict[Path, None] = {}
+    for p in paths:
+        target = (root / p) if not Path(p).is_absolute() else Path(p)
+        if target.is_file() and target.suffix == ".py":
+            seen[target.resolve()] = None
+        elif target.is_dir():
+            for f in sorted(target.rglob("*.py")):
+                if "__pycache__" in f.parts:
+                    continue
+                seen[f.resolve()] = None
+    modules = []
+    for f in seen:
+        mod = load_module(f, root)
+        if mod is not None:
+            modules.append(mod)
+    modules.sort(key=lambda m: m.rel)
+    return modules

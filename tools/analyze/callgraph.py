@@ -1,0 +1,254 @@
+"""Lightweight call graph with a "jit-reachable" closure.
+
+Seeds are functions handed to the tracer: ``jax.jit(fn)`` /
+``pjit(fn)`` arguments (including the ``functools.partial(jax.jit,
+...)`` decorator spelling), jit-decorated defs, and kernel bodies
+passed as the first argument of ``pl.pallas_call``. Reachability then
+propagates along *name-matched* call edges: a call to ``run_aggregate_graph``
+inside a traced function marks every def with that trailing name
+reachable. This over-approximates (no type inference, no aliasing), so
+very generic names are stoplisted rather than chased — a missed edge
+only softens a warning-class rule, while a bogus edge sprays false
+positives through host-side code.
+
+Rules that scan "traced code" walk the *complete subtree* of each
+reachable function (nested defs included, its own decorator list
+excluded — decorators run at definition time on the host).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Set, Tuple
+
+from tools.analyze.cache import Module
+from tools.analyze.registry import dotted_name, is_jit_call
+
+# names too generic to chase across modules: matching them pulls in half
+# the host-side tree
+GENERIC_STOPLIST = {
+    "get",
+    "run",
+    "close",
+    "flush",
+    "build",
+    "init",
+    "update",
+    "step",
+    "call",
+    "main",
+    "wrapper",
+    "inner",
+    "submit",
+    "append",
+    "extend",
+    "add",
+    "pop",
+    "items",
+    "keys",
+    "values",
+    "copy",
+    "format",
+    "join",
+    "split",
+    "read",
+    "write",
+    "open",
+    "print",
+}
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str  # e.g. "InferenceSession.__init__.fn"
+    module_rel: str
+    node: ast.AST  # FunctionDef | AsyncFunctionDef | Lambda
+    calls: Set[str]  # trailing names of call targets in the body
+    jit_seed: bool = False
+    kernel_body: bool = False
+    jit_reachable: bool = False
+
+    @property
+    def name(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+
+def _call_names(node: ast.AST) -> Set[str]:
+    """Trailing names of every call inside ``node``'s body."""
+    names: Set[str] = set()
+    body = getattr(node, "body", [])
+    stmts = body if isinstance(body, list) else [body]
+    for stmt in stmts:
+        for sub in ast.walk(stmt):
+            if isinstance(sub, ast.Call):
+                dn = dotted_name(sub.func)
+                if dn:
+                    names.add(dn[-1])
+    return names
+
+
+class _Collector(ast.NodeVisitor):
+    def __init__(self, module: Module) -> None:
+        self.module = module
+        self.stack: List[str] = []
+        self.functions: List[FunctionInfo] = []
+        self._by_node: Dict[ast.AST, FunctionInfo] = {}
+
+    def _record(self, node: ast.AST, name: str) -> FunctionInfo:
+        qual = ".".join(self.stack + [name])
+        info = FunctionInfo(
+            qualname=qual,
+            module_rel=self.module.rel,
+            node=node,
+            calls=_call_names(node),
+        )
+        self.functions.append(info)
+        self._by_node[node] = info
+        return info
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_def(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._visit_def(node)
+
+    def _visit_def(self, node: ast.AST) -> None:
+        info = self._record(node, node.name)
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call) and is_jit_call(dec):
+                info.jit_seed = True
+            elif dotted_name(dec) and dotted_name(dec)[-1] in ("jit", "pjit"):
+                info.jit_seed = True
+        self.stack.append(node.name)
+        for child in node.body:
+            self.visit(child)
+        self.stack.pop()
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self._record(node, f"<lambda:{node.lineno}>")
+        self.generic_visit(node)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.stack.append(node.name)
+        for child in node.body:
+            self.visit(child)
+        self.stack.pop()
+
+
+class CallGraph:
+    """Name-indexed function table + reachability over all modules."""
+
+    def __init__(self, modules: List[Module]) -> None:
+        self.functions: List[FunctionInfo] = []
+        self.by_node: Dict[int, FunctionInfo] = {}
+        self._by_name: Dict[str, List[FunctionInfo]] = {}
+        per_module: Dict[str, _Collector] = {}
+        for mod in modules:
+            col = _Collector(mod)
+            for stmt in mod.tree.body:
+                col.visit(stmt)
+            per_module[mod.rel] = col
+            for info in col.functions:
+                self.functions.append(info)
+                self.by_node[id(info.node)] = info
+                self._by_name.setdefault(info.name, []).append(info)
+        for mod in modules:
+            self._mark_seeds(mod, per_module[mod.rel])
+        self._propagate()
+
+    # -------------------------------------------------------------- seeds
+    def _mark_seeds(self, module: Module, col: _Collector) -> None:
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = dotted_name(node.func)
+            if is_jit_call(node) and dn and dn[-1] in ("jit", "pjit"):
+                self._seed_arg(node, col, module, kernel=False)
+            elif dn and dn[-1] == "pallas_call":
+                self._seed_arg(node, col, module, kernel=True)
+
+    def _seed_arg(
+        self, call: ast.Call, col: _Collector, module: Module, kernel: bool
+    ) -> None:
+        args = list(call.args)
+        if not args:
+            return
+        target = args[0]
+        # unwrap functools.partial(kernel_fn, ...)
+        if isinstance(target, ast.Call):
+            tdn = dotted_name(target.func)
+            if tdn and tdn[-1] == "partial" and target.args:
+                target = target.args[0]
+        if isinstance(target, ast.Lambda):
+            info = col._by_node.get(target)
+            if info is not None:
+                self._mark(info, kernel)
+            return
+        tdn = dotted_name(target)
+        if not tdn:
+            return
+        name = tdn[-1]
+        # prefer defs in the same module; fall back to the global index
+        local = [f for f in col.functions if f.name == name]
+        for info in local or self._by_name.get(name, []):
+            self._mark(info, kernel)
+
+    def _mark(self, info: FunctionInfo, kernel: bool) -> None:
+        if kernel:
+            info.kernel_body = True
+        else:
+            info.jit_seed = True
+
+    # ------------------------------------------------------- reachability
+    def _propagate(self) -> None:
+        work = [f for f in self.functions if f.jit_seed or f.kernel_body]
+        for f in work:
+            f.jit_reachable = True
+        while work:
+            fn = work.pop()
+            for callee in fn.calls:
+                if callee in GENERIC_STOPLIST:
+                    continue
+                for target in self._by_name.get(callee, []):
+                    if not target.jit_reachable:
+                        target.jit_reachable = True
+                        work.append(target)
+
+    # ------------------------------------------------------------- access
+    def reachable_in(self, module: Module) -> List[FunctionInfo]:
+        return [
+            f
+            for f in self.functions
+            if f.module_rel == module.rel and f.jit_reachable
+        ]
+
+    def kernels_in(self, module: Module) -> List[FunctionInfo]:
+        return [
+            f
+            for f in self.functions
+            if f.module_rel == module.rel and f.kernel_body
+        ]
+
+    def info_for(self, node: ast.AST) -> FunctionInfo:
+        return self.by_node[id(node)]
+
+
+def walk_body(fn_node: ast.AST) -> Iterator[ast.AST]:
+    """Every node in a function's body — nested defs included, the
+    function's own decorator list and signature excluded."""
+    body = getattr(fn_node, "body", [])
+    stmts = body if isinstance(body, list) else [body]
+    for stmt in stmts:
+        yield from ast.walk(stmt)
+
+
+def enclosing_functions(
+    module: Module,
+) -> List[Tuple[ast.AST, List[ast.AST]]]:
+    """(function node, [its direct statements]) for every def in a module."""
+    out = []
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.append((node, list(node.body)))
+    return out

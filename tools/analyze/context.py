@@ -1,0 +1,124 @@
+"""Analysis context shared by every rule: modules, call graph, and the
+declared ``DISPATCH`` counter keys with import-aware resolution.
+
+``DISPATCH`` dicts are module-level literals (``core/flows.py`` and
+``kernels/*/kernel.py``). A use site like ``flows.DISPATCH["traces"]``
+is resolved through the using module's imports back to the declaring
+module, so each module's key set is checked against the right
+declaration; unresolvable references fall back to the union of all
+declared keys (never a false positive, still catches typos).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from tools.analyze.cache import Module
+from tools.analyze.callgraph import CallGraph
+
+
+def _module_name_to_rel(name: str, known: Set[str]) -> Optional[str]:
+    """Dotted module name -> rel path, trying src/ layout first."""
+    base = name.replace(".", "/")
+    for cand in (f"src/{base}.py", f"{base}.py", f"src/{base}/__init__.py"):
+        if cand in known:
+            return cand
+    return None
+
+
+def _resolve_relative(module: Module, level: int, name: str) -> str:
+    """``from .kernel import DISPATCH`` inside pkg/mod.py -> "pkg.kernel"."""
+    parts = module.rel.rsplit(".py", 1)[0].split("/")
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    # drop the module filename plus (level - 1) packages
+    parts = parts[: len(parts) - level] if level <= len(parts) else []
+    return ".".join(parts + [name]) if name else ".".join(parts)
+
+
+class ImportMap:
+    """Local binding name -> dotted module (or module attribute) source."""
+
+    def __init__(self, module: Module) -> None:
+        # name bound in this module -> dotted origin, e.g.
+        #   "flows" -> "repro.core.flows"        (from repro.core import flows)
+        #   "DISPATCH" -> "repro.core.flows.DISPATCH"
+        self.bindings: Dict[str, str] = {}
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    bound = alias.asname or alias.name.split(".")[0]
+                    origin = alias.name if alias.asname else alias.name.split(".")[0]
+                    self.bindings[bound] = origin
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:
+                    base = _resolve_relative(module, node.level, node.module or "")
+                else:
+                    base = node.module or ""
+                for alias in node.names:
+                    bound = alias.asname or alias.name
+                    origin = f"{base}.{alias.name}" if base else alias.name
+                    self.bindings[bound] = origin
+
+
+class AnalysisContext:
+    def __init__(self, modules: List[Module]) -> None:
+        self.modules = modules
+        self.by_rel: Dict[str, Module] = {m.rel: m for m in modules}
+        self.callgraph = CallGraph(modules)
+        self.imports: Dict[str, ImportMap] = {m.rel: ImportMap(m) for m in modules}
+        # rel path -> keys of its module-level DISPATCH literal
+        self.dispatch_decls: Dict[str, Set[str]] = {}
+        for m in modules:
+            keys = _declared_dispatch_keys(m)
+            if keys is not None:
+                self.dispatch_decls[m.rel] = keys
+        self.dispatch_union: Set[str] = (
+            set().union(*self.dispatch_decls.values())
+            if self.dispatch_decls
+            else set()
+        )
+
+    def dispatch_keys_for(self, module: Module, node: ast.AST) -> Optional[Set[str]]:
+        """Declared keys governing a ``...DISPATCH[...]`` use site.
+
+        ``node`` is the expression being subscripted (``Name`` or
+        ``Attribute`` whose trailing attr is DISPATCH). Returns None when
+        nothing is declared anywhere (rule stays silent).
+        """
+        if not self.dispatch_decls:
+            return None
+        known = set(self.by_rel)
+        imap = self.imports[module.rel]
+        if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+            origin = imap.bindings.get(node.value.id)
+            if origin:
+                rel = _module_name_to_rel(origin, known)
+                if rel in self.dispatch_decls:
+                    return self.dispatch_decls[rel]
+        elif isinstance(node, ast.Name):
+            if module.rel in self.dispatch_decls:
+                return self.dispatch_decls[module.rel]
+            origin = imap.bindings.get(node.id)
+            if origin and origin.endswith(".DISPATCH"):
+                rel = _module_name_to_rel(origin.rsplit(".", 1)[0], known)
+                if rel in self.dispatch_decls:
+                    return self.dispatch_decls[rel]
+        return self.dispatch_union
+
+
+def _declared_dispatch_keys(module: Module) -> Optional[Set[str]]:
+    """Keys of a top-level ``DISPATCH = {...}`` literal, if present."""
+    for stmt in module.tree.body:
+        if not isinstance(stmt, ast.Assign):
+            continue
+        names = [t.id for t in stmt.targets if isinstance(t, ast.Name)]
+        if "DISPATCH" not in names or not isinstance(stmt.value, ast.Dict):
+            continue
+        keys = set()
+        for k in stmt.value.keys:
+            if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                keys.add(k.value)
+        return keys
+    return None

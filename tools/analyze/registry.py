@@ -1,0 +1,182 @@
+"""Rule registry, findings, and the committed baseline.
+
+Mirrors the repo's model/dataset registries: rules self-register via the
+``@register_rule`` decorator at import time, the driver iterates
+``iter_rules()``. A ``Finding`` fingerprints on the *content* of its
+line (rule + file + snippet hash + occurrence index), so pure line
+drift — code added above a baselined finding — does not resurrect it,
+while editing the flagged line itself does.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+from collections import Counter
+from pathlib import Path
+from typing import TYPE_CHECKING, Dict, Iterable, Iterator, List, Tuple, Type
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from tools.analyze.cache import Module
+    from tools.analyze.context import AnalysisContext
+
+BASELINE_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # rel posix path
+    line: int
+    col: int
+    message: str
+    snippet: str = ""
+
+    def content_key(self) -> str:
+        digest = hashlib.sha1(self.snippet.strip().encode("utf-8")).hexdigest()
+        return f"{self.rule}:{self.path}:{digest[:12]}"
+
+    def text(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+    def github(self) -> str:
+        return (
+            f"::error file={self.path},line={self.line},col={self.col},"
+            f"title=repro-lint({self.rule})::{self.message}"
+        )
+
+
+class Rule:
+    """One contract checker. Subclasses set ``name``/``summary`` and
+    implement ``check`` yielding findings for a single module."""
+
+    name: str = ""
+    summary: str = ""
+
+    def check(self, module: "Module", ctx: "AnalysisContext") -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, module: "Module", node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0) + 1
+        return Finding(
+            rule=self.name,
+            path=module.rel,
+            line=line,
+            col=col,
+            message=message,
+            snippet=module.snippet(line),
+        )
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def register_rule(cls: Type[Rule]) -> Type[Rule]:
+    if not cls.name:
+        raise ValueError(f"rule {cls.__name__} has no name")
+    if cls.name in _RULES:
+        raise ValueError(f"duplicate rule name {cls.name!r}")
+    _RULES[cls.name] = cls()
+    return cls
+
+
+def iter_rules() -> List[Rule]:
+    return [_RULES[name] for name in sorted(_RULES)]
+
+
+def rule_names() -> List[str]:
+    return sorted(_RULES)
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def fingerprints(findings: Iterable[Finding]) -> Counter:
+    """Multiset of content keys — duplicates of the same line count."""
+    return Counter(f.content_key() for f in findings)
+
+
+def new_findings(findings: List[Finding], baseline: Counter) -> List[Finding]:
+    """Findings beyond what the baseline grandfathers, content-matched.
+
+    With N identical occurrences baselined and N+K present, the K
+    later-in-file ones are new.
+    """
+    budget = Counter(baseline)
+    fresh = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.col)):
+        key = f.content_key()
+        if budget[key] > 0:
+            budget[key] -= 1
+        else:
+            fresh.append(f)
+    return fresh
+
+
+def load_baseline(path: Path) -> Counter:
+    if not path.exists():
+        return Counter()
+    data = json.loads(path.read_text())
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(f"unsupported baseline version in {path}")
+    return Counter(data.get("fingerprints", {}))
+
+
+def save_baseline(path: Path, findings: List[Finding]) -> Counter:
+    counts = fingerprints(findings)
+    payload = {
+        "version": BASELINE_VERSION,
+        "fingerprints": dict(sorted(counts.items())),
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers used by several rule families
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> Tuple[str, ...]:
+    """``jax.lax.fori_loop`` -> ("jax", "lax", "fori_loop"); () if the
+    base is not a plain name chain (calls/subscripts terminate it)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def root_name(node: ast.AST) -> str:
+    """Leftmost plain name of an attribute/subscript/call chain, or ""."""
+    while True:
+        if isinstance(node, ast.Attribute):
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        else:
+            break
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def is_jit_call(node: ast.Call) -> bool:
+    """``jax.jit(...)`` / ``jit(...)`` / ``pjit(...)`` and the
+    ``functools.partial(jax.jit, ...)`` decorator spelling."""
+    dn = dotted_name(node.func)
+    if dn and dn[-1] in ("jit", "pjit"):
+        return True
+    if dn and dn[-1] == "partial" and node.args:
+        first = node.args[0]
+        fdn = dotted_name(first)
+        return bool(fdn) and fdn[-1] in ("jit", "pjit")
+    return False

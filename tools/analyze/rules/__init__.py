@@ -1,0 +1,9 @@
+"""Rule modules self-register on import (``@register_rule``)."""
+
+from tools.analyze.rules import (  # noqa: F401
+    dispatch_keys,
+    host_sync,
+    kernel_hygiene,
+    serve_concurrency,
+    trace_purity,
+)

@@ -1,0 +1,110 @@
+"""DISPATCH counter discipline.
+
+The dispatch counters (``core/flows.py`` DISPATCH, the kernel module's
+own DISPATCH) back the repo's zero-dispatch / single-launch invariants:
+tests and benchmarks snapshot them around a call and assert deltas. A
+typo'd key silently creates a new counter that no invariant watches; an
+increment of a *runtime* key inside traced code fires once at trace
+time and never again, so the invariant it feeds goes blind.
+
+Trace-time keys — counters that by design tick during tracing to
+assert trace counts — are exempt inside traced code:
+``traces``, ``grouped_traces``, ``sharded_traces``, ``pallas_calls``,
+``ego_traces``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Set
+
+from tools.analyze.cache import Module
+from tools.analyze.callgraph import walk_body
+from tools.analyze.context import AnalysisContext
+from tools.analyze.registry import Finding, Rule, register_rule
+
+TRACE_TIME_KEYS = {
+    "traces",
+    "grouped_traces",
+    "sharded_traces",
+    "pallas_calls",
+    "ego_traces",
+}
+
+
+def _dispatch_subscript(node: ast.AST) -> Optional[ast.Subscript]:
+    """Matches ``DISPATCH[...]`` / ``flows.DISPATCH[...]`` / etc."""
+    if not isinstance(node, ast.Subscript):
+        return None
+    base = node.value
+    if isinstance(base, ast.Name) and base.id == "DISPATCH":
+        return node
+    if isinstance(base, ast.Attribute) and base.attr == "DISPATCH":
+        return node
+    return None
+
+
+def _const_key(sub: ast.Subscript) -> Optional[str]:
+    sl = sub.slice
+    if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+        return sl.value
+    return None
+
+
+@register_rule
+class DispatchUnknownKey(Rule):
+    name = "dispatch-unknown-key"
+    summary = "DISPATCH[...] key not declared in the owning DISPATCH dict"
+
+    def check(self, module: Module, ctx: AnalysisContext) -> Iterator[Finding]:
+        for node in ast.walk(module.tree):
+            sub = _dispatch_subscript(node)
+            if sub is None:
+                continue
+            key = _const_key(sub)
+            if key is None:
+                continue
+            declared = ctx.dispatch_keys_for(module, sub.value)
+            if declared is None or key in declared:
+                continue
+            yield self.finding(
+                module,
+                sub,
+                f"DISPATCH key {key!r} is not declared in the owning "
+                "DISPATCH dict — a typo here silently detaches the "
+                "counter from every invariant that watches it",
+            )
+
+
+@register_rule
+class DispatchInTraced(Rule):
+    name = "dispatch-in-traced"
+    summary = "runtime DISPATCH counter incremented inside traced code"
+
+    def check(self, module: Module, ctx: AnalysisContext) -> Iterator[Finding]:
+        seen: Set[int] = set()
+        for info in ctx.callgraph.reachable_in(module):
+            for node in walk_body(info.node):
+                if not isinstance(node, (ast.AugAssign, ast.Assign)):
+                    continue
+                targets = (
+                    [node.target]
+                    if isinstance(node, ast.AugAssign)
+                    else node.targets
+                )
+                for t in targets:
+                    sub = _dispatch_subscript(t)
+                    if sub is None or id(sub) in seen:
+                        continue
+                    seen.add(id(sub))
+                    key = _const_key(sub)
+                    if key in TRACE_TIME_KEYS:
+                        continue
+                    yield self.finding(
+                        module,
+                        node,
+                        f"DISPATCH[{key!r}] written inside traced code "
+                        f"({info.qualname}): side effects run once at "
+                        "trace time, so the counter stops tracking real "
+                        "dispatches — count on the host, outside jit",
+                    )

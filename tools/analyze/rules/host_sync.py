@@ -1,0 +1,169 @@
+"""Host-sync hazards in serving steady-state code.
+
+Scope: ``src/repro/serve/`` and ``src/repro/core/session.py`` — the
+per-request hot path. A ``.block_until_ready()`` / ``.item()`` /
+``float()`` / ``np.asarray()`` on a jax value forces a device→host
+round trip and serializes the pipeline; the serve design funnels every
+sanctioned sync through one point (``ServeFrontend._resolve``). New
+sync sites need a pragma arguing why.
+
+Jax-valued names are tracked with a one-pass, order-aware dataflow
+sketch per function: assignments from jnp/jax calls (or known
+session/executable dispatches) mark names device-resident; assignments
+from np.* or constants clear them. ``jax.tree_util.tree_map`` lambda
+parameters count as jax-valued inside the lambda.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from tools.analyze.cache import Module
+from tools.analyze.context import AnalysisContext
+from tools.analyze.registry import Finding, Rule, dotted_name, register_rule
+
+SCOPE_PREFIX = "src/repro/serve/"
+SCOPE_FILES = {"src/repro/core/session.py"}
+
+JAX_ROOTS = {"jnp", "jax"}
+DEVICE_CALL_ATTRS = {
+    "query",
+    "query_ego",
+    "apply",
+    "checkout",
+    "compile_query",
+    "compile_ego",
+}
+SYNC_ATTRS = {"item", "tolist", "block_until_ready", "device_get"}
+NP_SYNC_FNS = {"asarray", "array", "copy"}
+BUILTIN_SYNC = {"float", "int", "bool"}
+
+
+def _in_scope(module: Module) -> bool:
+    return module.rel.startswith(SCOPE_PREFIX) or module.rel in SCOPE_FILES
+
+
+def _is_jax_expr(node: ast.AST, jax_names: Set[str]) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in jax_names
+    if isinstance(node, (ast.Subscript, ast.Attribute)):
+        return _is_jax_expr(node.value, jax_names)
+    if isinstance(node, ast.Call):
+        dn = dotted_name(node.func)
+        if dn and dn[0] in JAX_ROOTS:
+            return True
+        if dn and dn[-1] in DEVICE_CALL_ATTRS:
+            return True
+        if dn and len(dn) == 1 and dn[0] in jax_names:
+            return True  # exe(...) where exe came from compile_*
+        # x.astype(...) etc. on a jax value stays jax
+        if isinstance(node.func, ast.Attribute):
+            return _is_jax_expr(node.func.value, jax_names)
+    if isinstance(node, ast.BinOp):
+        return _is_jax_expr(node.left, jax_names) or _is_jax_expr(node.right, jax_names)
+    return False
+
+
+def _target_names(target: ast.AST) -> Iterator[str]:
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from _target_names(elt)
+    elif isinstance(target, ast.Starred):
+        yield from _target_names(target.value)
+
+
+@register_rule
+class ServeHostSync(Rule):
+    name = "serve-host-sync"
+    summary = "device→host sync (np.asarray/.item()/float) on a jax value"
+
+    def check(self, module: Module, ctx: AnalysisContext) -> Iterator[Finding]:
+        if not _in_scope(module):
+            return
+        seen: Set[tuple] = set()
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for f in self._check_fn(module, node):
+                    key = (f.line, f.col)
+                    if key not in seen:
+                        seen.add(key)
+                        yield f
+
+    def _check_fn(self, module: Module, fn: ast.AST) -> Iterator[Finding]:
+        jax_names: Set[str] = set()
+        # one pass in source order: track bindings, flag syncs as seen
+        for stmt in fn.body:
+            yield from self._walk_stmt(module, stmt, jax_names)
+
+    def _walk_stmt(
+        self, module: Module, stmt: ast.AST, jax_names: Set[str]
+    ) -> Iterator[Finding]:
+        # loop/comprehension targets bind before their element
+        # expressions evaluate — collect them first so `np.asarray(l)
+        # for l in leaves` sees `l` as jax-valued
+        for sub in ast.walk(stmt):
+            if isinstance(sub, (ast.For, ast.AsyncFor, ast.comprehension)):
+                if _is_jax_expr(sub.iter, jax_names):
+                    jax_names.update(_target_names(sub.target))
+        for sub in ast.walk(stmt):
+            if isinstance(sub, ast.Call):
+                yield from self._check_call(module, sub, jax_names)
+            elif isinstance(sub, ast.Assign):
+                self._bind(sub.targets, sub.value, jax_names)
+            elif isinstance(sub, ast.AnnAssign) and sub.value is not None:
+                self._bind([sub.target], sub.value, jax_names)
+
+    def _bind(self, targets, value: ast.AST, jax_names: Set[str]) -> None:
+        names = [n for t in targets for n in _target_names(t)]
+        vdn = dotted_name(value.func) if isinstance(value, ast.Call) else ()
+        host_valued = bool(vdn) and vdn[0] in ("np", "numpy")
+        if _is_jax_expr(value, jax_names) and not host_valued:
+            jax_names.update(names)
+        else:
+            jax_names.difference_update(names)
+
+    def _check_call(
+        self, module: Module, call: ast.Call, jax_names: Set[str]
+    ) -> Iterator[Finding]:
+        dn = dotted_name(call.func)
+        # tree_map(lambda l: ..., params): lambda params are jax-valued
+        if dn and dn[-1] == "tree_map" and call.args:
+            lam = call.args[0]
+            if isinstance(lam, ast.Lambda):
+                inner = set(jax_names)
+                inner.update(a.arg for a in lam.args.args)
+                yield from self._scan_expr(module, lam.body, inner)
+        if not dn:
+            return
+        arg = call.args[0] if call.args else None
+        if dn[0] in ("np", "numpy") and dn[-1] in NP_SYNC_FNS:
+            if arg is not None and _is_jax_expr(arg, jax_names):
+                yield self._sync(module, call, ".".join(dn))
+        elif len(dn) == 1 and dn[0] in BUILTIN_SYNC:
+            if arg is not None and _is_jax_expr(arg, jax_names):
+                yield self._sync(module, call, dn[0])
+        elif dn[0] == "jax" and dn[-1] in ("block_until_ready", "device_get"):
+            yield self._sync(module, call, ".".join(dn))
+        elif dn[-1] in SYNC_ATTRS and isinstance(call.func, ast.Attribute):
+            if _is_jax_expr(call.func.value, jax_names):
+                yield self._sync(module, call, ".".join(dn))
+
+    def _scan_expr(
+        self, module: Module, expr: ast.AST, jax_names: Set[str]
+    ) -> Iterator[Finding]:
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Call):
+                yield from self._check_call(module, sub, jax_names)
+
+    def _sync(self, module: Module, call: ast.Call, what: str) -> Finding:
+        return self.finding(
+            module,
+            call,
+            f"{what} forces a device→host sync on the serve hot path: "
+            "it stalls the dispatch pipeline — keep values on device "
+            "and sync only at the sanctioned resolve point (or pragma "
+            "with a justification)",
+        )

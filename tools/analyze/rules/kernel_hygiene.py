@@ -1,0 +1,235 @@
+"""Pallas kernel-body hygiene.
+
+Kernel bodies (functions handed to ``pl.pallas_call``, all living in
+``kernels/*/kernel.py``) compile to Mosaic/Triton — host callbacks
+don't exist there, Python control flow on ref *values* is resolved at
+trace time against abstract values, and any call outside the small
+blessed surface (jnp / jax.lax / pl / pltpu / this module's own
+helpers) either fails to lower or, worse, silently runs at trace time.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from tools.analyze.cache import Module
+from tools.analyze.callgraph import FunctionInfo, walk_body
+from tools.analyze.context import AnalysisContext
+from tools.analyze.registry import (
+    Finding,
+    Rule,
+    dotted_name,
+    register_rule,
+    root_name,
+)
+
+KERNEL_PATH_RE = ("src/repro/kernels/", "/kernel.py")
+
+ALLOWED_ROOTS = {"jnp", "jax", "pl", "pltpu", "lax", "functools"}
+ALLOWED_BUILTINS = {
+    "range",
+    "len",
+    "min",
+    "max",
+    "abs",
+    "int",
+    "float",
+    "bool",
+    "enumerate",
+    "zip",
+    "tuple",
+    "isinstance",
+    "getattr",
+    "partial",
+}
+HOST_CALL_NAMES = {"print", "breakpoint", "input", "open"}
+HOST_ROOTS = {"np", "numpy", "os", "sys", "time", "logging"}
+
+
+def _is_kernel_module(module: Module) -> bool:
+    pre, suf = KERNEL_PATH_RE
+    return module.rel.startswith(pre) and module.rel.endswith(suf)
+
+
+def _local_names(fn_node: ast.AST) -> Set[str]:
+    """Params, assigned names, loop vars, nested defs — in-kernel names."""
+    names: Set[str] = set()
+    args = fn_node.args
+    for a in args.args + args.posonlyargs + args.kwonlyargs:
+        names.add(a.arg)
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    for sub in walk_body(fn_node):
+        if isinstance(sub, ast.Name) and isinstance(
+            sub.ctx, (ast.Store, ast.Del)
+        ):
+            names.add(sub.id)
+        elif isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(sub.name)
+    return names
+
+
+def _module_level_names(module: Module) -> Set[str]:
+    """Top-level defs, assignments, and imported names of the module."""
+    names: Set[str] = set()
+    for stmt in module.tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            names.add(stmt.name)
+        elif isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(stmt, ast.ImportFrom):
+            for alias in stmt.names:
+                names.add(alias.asname or alias.name)
+        elif isinstance(stmt, ast.Import):
+            for alias in stmt.names:
+                names.add(alias.asname or alias.name.split(".")[0])
+    return names
+
+
+class _KernelRule(Rule):
+    def check(self, module: Module, ctx: AnalysisContext) -> Iterator[Finding]:
+        if not _is_kernel_module(module):
+            return
+        for info in ctx.callgraph.kernels_in(module):
+            yield from self.check_kernel(module, ctx, info)
+
+    def check_kernel(
+        self, module: Module, ctx: AnalysisContext, info: FunctionInfo
+    ) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+@register_rule
+class KernelHostCallback(_KernelRule):
+    name = "kernel-host-callback"
+    summary = "host callback / IO / numpy call inside a Pallas kernel body"
+
+    def check_kernel(
+        self, module: Module, ctx: AnalysisContext, info: FunctionInfo
+    ) -> Iterator[Finding]:
+        for node in walk_body(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = dotted_name(node.func)
+            if not dn:
+                continue
+            bad = (
+                (len(dn) == 1 and dn[0] in HOST_CALL_NAMES)
+                or dn[0] in HOST_ROOTS
+                or "callback" in dn[-1]
+                or (dn[0] == "jax" and len(dn) > 1 and dn[1] == "debug")
+            )
+            if bad:
+                yield self.finding(
+                    module,
+                    node,
+                    f"host-side call {'.'.join(dn)} inside kernel body "
+                    f"{info.qualname}: kernels lower to Mosaic — host "
+                    "callbacks/IO/numpy cannot run there",
+                )
+
+
+@register_rule
+class KernelRefBranch(_KernelRule):
+    name = "kernel-ref-branch"
+    summary = "Python if/while on ref values inside a Pallas kernel body"
+
+    def check_kernel(
+        self, module: Module, ctx: AnalysisContext, info: FunctionInfo
+    ) -> Iterator[Finding]:
+        params = _param_names(info.node)
+        for node in walk_body(info.node):
+            if not isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                continue
+            if _reads_ref(node.test, params):
+                yield self.finding(
+                    module,
+                    node,
+                    f"Python branch on a ref value in kernel body "
+                    f"{info.qualname}: data-dependent control flow must "
+                    "go through pl.when / lax.cond / masking",
+                )
+
+
+def _param_names(fn_node: ast.AST) -> Set[str]:
+    args = fn_node.args
+    names = {a.arg for a in args.args + args.posonlyargs + args.kwonlyargs}
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    return names
+
+
+_REF_METADATA = {"shape", "ndim", "dtype", "size"}
+
+
+def _reads_ref(test: ast.AST, params: Set[str]) -> bool:
+    """The branch test loads a ref *value* (``ref[...]``).
+
+    Metadata reads (``ref.shape[-1]``) are static at trace time —
+    branching on them is the sanctioned static-guard idiom.
+    """
+    for sub in ast.walk(test):
+        if not isinstance(sub, ast.Subscript):
+            continue
+        base = sub.value
+        if isinstance(base, ast.Attribute) and base.attr in _REF_METADATA:
+            continue
+        root = root_name(base)
+        if root in params or root.endswith("_ref"):
+            return True
+    return False
+
+
+@register_rule
+class KernelForeignCall(_KernelRule):
+    name = "kernel-foreign-call"
+    summary = "call outside the blessed surface inside a Pallas kernel body"
+
+    def check_kernel(
+        self, module: Module, ctx: AnalysisContext, info: FunctionInfo
+    ) -> Iterator[Finding]:
+        allowed_local = _local_names(info.node) | _module_level_names(module)
+        for node in walk_body(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = dotted_name(node.func)
+            if not dn:
+                # method on a computed value (e.g. x[...].sum()): resolve
+                # the chain's root name instead
+                root = root_name(node.func)
+                if root and root not in allowed_local | ALLOWED_ROOTS:
+                    yield self._foreign(module, node, root, info)
+                continue
+            root = dn[0]
+            if root in ALLOWED_ROOTS:
+                if root == "jax" and len(dn) > 1 and dn[1] == "debug":
+                    continue  # kernel-host-callback owns this
+                continue
+            if root in HOST_ROOTS or (len(dn) == 1 and dn[0] in HOST_CALL_NAMES):
+                continue  # kernel-host-callback owns this
+            if len(dn) == 1 and (
+                root in ALLOWED_BUILTINS or root in allowed_local
+            ):
+                continue
+            if root in allowed_local:
+                continue  # method call on a local/module name
+            yield self._foreign(module, node, ".".join(dn), info)
+
+    def _foreign(
+        self, module: Module, node: ast.Call, what: str, info: FunctionInfo
+    ) -> Finding:
+        return self.finding(
+            module,
+            node,
+            f"call to {what} inside kernel body {info.qualname} is "
+            "outside the blessed surface (jnp/jax.lax/pl/pltpu/module "
+            "helpers): it will fail to lower or silently run at trace "
+            "time",
+        )

@@ -1,0 +1,127 @@
+"""Serve-plane concurrency contracts.
+
+The serving stack's determinism rests on the injected clock/executor
+seam (``serve/clock.py``): ``FakeClock`` load tests only stay sleep-free
+if nothing in ``serve/`` touches the wall clock directly. Its liveness
+rests on never blocking while holding a lock — the collector/stepper
+handshake and the no-stranded-futures contract both assume lock bodies
+are O(bookkeeping).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from tools.analyze.cache import Module
+from tools.analyze.context import AnalysisContext
+from tools.analyze.registry import Finding, Rule, dotted_name, register_rule
+
+SERVE_PREFIX = "src/repro/serve/"
+
+# attribute calls that park the calling thread (or dispatch work and
+# wait for it) — never while holding a lock
+BLOCKING_ATTRS = {
+    "sleep",
+    "result",
+    "join",
+    "acquire",
+    "wait",
+    "wait_for",
+    "block_until_ready",
+    "query",
+    "query_ego",
+    "prewarm",
+    "drain",
+    "flush",
+}
+# condition-variable methods that are *correct* on the held object
+COND_METHODS = {"wait", "wait_for", "notify", "notify_all"}
+
+
+def _in_serve(module: Module) -> bool:
+    return module.rel.startswith(SERVE_PREFIX)
+
+
+@register_rule
+class ServeWallclock(Rule):
+    name = "serve-wallclock"
+    summary = "raw time.*/threading.Timer in serve/ (bypasses clock seam)"
+
+    def check(self, module: Module, ctx: AnalysisContext) -> Iterator[Finding]:
+        if not _in_serve(module):
+            return
+        for node in ast.walk(module.tree):
+            dn = dotted_name(node) if isinstance(node, ast.Attribute) else ()
+            if dn and dn[0] == "time" and len(dn) > 1:
+                yield self.finding(
+                    module,
+                    node,
+                    f"raw {'.'.join(dn)} in serve/: all timing must go "
+                    "through the injected Clock seam so FakeClock load "
+                    "tests stay deterministic and sleep-free",
+                )
+            elif isinstance(node, ast.Call) and dotted_name(node.func)[-1:] == (
+                "Timer",
+            ):
+                yield self.finding(
+                    module,
+                    node,
+                    "threading.Timer in serve/: schedule through the "
+                    "Clock/executor seam instead",
+                )
+
+
+def _lock_like(expr: ast.AST) -> Optional[str]:
+    """A with-context that reads like a lock/condition; returns its
+    dump-key for identity comparison."""
+    dn = dotted_name(expr)
+    if not dn:
+        return None
+    last = dn[-1].lower()
+    if "lock" in last or "cond" in last or "mutex" in last:
+        return ast.dump(expr)
+    return None
+
+
+@register_rule
+class ServeLockBlocking(Rule):
+    name = "serve-lock-held-blocking"
+    summary = "blocking call while holding a lock in serve/"
+
+    def check(self, module: Module, ctx: AnalysisContext) -> Iterator[Finding]:
+        if not _in_serve(module):
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.With, ast.AsyncWith)):
+                continue
+            held = [
+                key
+                for item in node.items
+                if (key := _lock_like(item.context_expr)) is not None
+            ]
+            if not held:
+                continue
+            for stmt in node.body:
+                yield from self._scan(module, stmt, held)
+
+    def _scan(self, module: Module, stmt: ast.AST, held: list) -> Iterator[Finding]:
+        for sub in ast.walk(stmt):
+            if not isinstance(sub, ast.Call):
+                continue
+            dn = dotted_name(sub.func)
+            if not dn or dn[-1] not in BLOCKING_ATTRS:
+                continue
+            if dn[-1] in COND_METHODS and isinstance(sub.func, ast.Attribute):
+                # cond.wait()/wait_for() on the HELD condition releases it
+                # while parked — the one sanctioned blocking idiom
+                if ast.dump(sub.func.value) in held:
+                    continue
+            yield self.finding(
+                module,
+                sub,
+                f"{'.'.join(dn)} called while a lock is held: blocking "
+                "under a lock stalls every other serve thread and can "
+                "deadlock the collector/stepper handshake — move the "
+                "blocking call outside the lock body",
+            )

@@ -1,0 +1,215 @@
+"""Trace-purity / retrace-hazard rules.
+
+The session contract (``core/session.py``, ``DISPATCH["traces"]``
+asserts in tests) is trace-once: every ``jax.jit`` is created at build
+time, cached, and reused. Creating a jit inside a loop or per-call
+function re-hashes statics every iteration and at worst retraces;
+branching Python control flow on traced values fails at trace time on
+the abstract value — both are exactly the class of bug the zero-retrace
+benchmarks only catch when a benchmark happens to walk the new path.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Set
+
+from tools.analyze.cache import Module
+from tools.analyze.callgraph import walk_body
+from tools.analyze.context import AnalysisContext
+from tools.analyze.registry import (
+    Finding,
+    Rule,
+    dotted_name,
+    is_jit_call,
+    register_rule,
+    root_name,
+)
+
+
+def _jit_creations(node: ast.AST) -> Iterator[ast.Call]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and is_jit_call(sub):
+            dn = dotted_name(sub.func)
+            if dn and dn[-1] in ("jit", "pjit"):
+                yield sub
+
+
+@register_rule
+class JitInLoop(Rule):
+    name = "jit-in-loop"
+    summary = "jax.jit/pjit created inside a loop body (retrace hazard)"
+
+    def check(self, module: Module, ctx: AnalysisContext) -> Iterator[Finding]:
+        for node in ast.walk(module.tree):
+            if not isinstance(node, (ast.For, ast.While, ast.AsyncFor)):
+                continue
+            for stmt in node.body + node.orelse:
+                for call in _jit_creations(stmt):
+                    yield self.finding(
+                        module,
+                        call,
+                        "jax.jit created inside a loop: every iteration "
+                        "re-wraps (and can retrace) — hoist the jit out and "
+                        "reuse one compiled callable",
+                    )
+
+
+@register_rule
+class JitInTraced(Rule):
+    name = "jit-in-traced"
+    summary = "jax.jit/pjit created inside jit-reachable (traced) code"
+
+    def check(self, module: Module, ctx: AnalysisContext) -> Iterator[Finding]:
+        seen: Set[int] = set()
+        for info in ctx.callgraph.reachable_in(module):
+            for call in _jit_creations_in_body(info.node):
+                if id(call) in seen:
+                    continue
+                seen.add(id(call))
+                yield self.finding(
+                    module,
+                    call,
+                    f"jit created inside traced code ({info.qualname}): "
+                    "nested jit wrapping at trace time is a retrace/"
+                    "cache-miss hazard — build executables at session "
+                    "compile time",
+                )
+
+
+def _jit_creations_in_body(fn_node: ast.AST) -> Iterator[ast.Call]:
+    for sub in walk_body(fn_node):
+        if isinstance(sub, ast.Call) and is_jit_call(sub):
+            dn = dotted_name(sub.func)
+            if dn and dn[-1] in ("jit", "pjit"):
+                yield sub
+
+
+_TRACED_ROOTS = {"jnp", "lax"}
+
+
+def _is_traced_value_expr(node: ast.AST) -> bool:
+    """Heuristic: the expression calls into jnp/jax.lax, so under jit it
+    yields a tracer — branching Python control flow on it explodes."""
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        dn = dotted_name(sub.func)
+        if not dn:
+            continue
+        if dn[0] in _TRACED_ROOTS:
+            return True
+        if dn[0] == "jax" and len(dn) > 1 and dn[1] in ("lax", "numpy", "nn"):
+            return True
+    return False
+
+
+@register_rule
+class TracedBranch(Rule):
+    name = "traced-python-branch"
+    summary = "Python if/while on a jnp/lax value inside traced code"
+
+    def check(self, module: Module, ctx: AnalysisContext) -> Iterator[Finding]:
+        seen: Set[int] = set()
+        for info in ctx.callgraph.reachable_in(module):
+            for sub in walk_body(info.node):
+                if not isinstance(sub, (ast.If, ast.While, ast.IfExp)):
+                    continue
+                if id(sub) in seen or not _is_traced_value_expr(sub.test):
+                    continue
+                seen.add(id(sub))
+                yield self.finding(
+                    module,
+                    sub,
+                    f"Python branch on a traced (jnp/lax) value in "
+                    f"{info.qualname}: fails at trace time or silently "
+                    "freezes one path — use jnp.where / lax.cond",
+                )
+
+
+_LITERAL_UNHASHABLE = (
+    ast.List,
+    ast.Dict,
+    ast.Set,
+    ast.ListComp,
+    ast.SetComp,
+    ast.DictComp,
+)
+_UNHASHABLE_CTORS = {"list", "dict", "set"}
+
+
+@register_rule
+class JitUnhashableStatic(Rule):
+    name = "jit-unhashable-static"
+    summary = "jit-wrapped local closes over a list/dict/set binding"
+
+    def check(self, module: Module, ctx: AnalysisContext) -> Iterator[Finding]:
+        for outer in ast.walk(module.tree):
+            if not isinstance(outer, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            local_defs = {
+                s.name: s
+                for s in ast.walk(outer)
+                if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and s is not outer
+            }
+            unhashable = _unhashable_bindings(outer)
+            if not unhashable:
+                continue
+            for call in _jit_creations(outer):
+                target = call.args[0] if call.args else None
+                if isinstance(target, ast.Name) and target.id in local_defs:
+                    fn_node = local_defs[target.id]
+                elif isinstance(target, ast.Lambda):
+                    fn_node = target
+                else:
+                    continue
+                for free in sorted(_free_names(fn_node) & set(unhashable)):
+                    yield self.finding(
+                        module,
+                        call,
+                        f"jit-wrapped {getattr(target, 'id', '<lambda>')} "
+                        f"closes over {free!r}, bound to an unhashable "
+                        "list/dict/set: hashing for the jit cache fails (or "
+                        "retraces) — use a tuple or pass it as an argument",
+                    )
+
+
+def _unhashable_bindings(outer: ast.AST) -> Dict[str, ast.AST]:
+    out: Dict[str, ast.AST] = {}
+    for sub in ast.walk(outer):
+        if isinstance(sub, ast.Assign):
+            value, targets = sub.value, sub.targets
+        elif isinstance(sub, ast.AnnAssign) and sub.value is not None:
+            value, targets = sub.value, [sub.target]
+        else:
+            continue
+        is_bad = isinstance(value, _LITERAL_UNHASHABLE) or (
+            isinstance(value, ast.Call)
+            and root_name(value.func) in _UNHASHABLE_CTORS
+        )
+        if not is_bad:
+            continue
+        for t in targets:
+            if isinstance(t, ast.Name):
+                out[t.id] = value
+    return out
+
+
+def _free_names(fn_node: ast.AST) -> Set[str]:
+    bound: Set[str] = set()
+    args = fn_node.args
+    for a in args.args + args.posonlyargs + args.kwonlyargs:
+        bound.add(a.arg)
+    if args.vararg:
+        bound.add(args.vararg.arg)
+    if args.kwarg:
+        bound.add(args.kwarg.arg)
+    loaded: Set[str] = set()
+    for sub in walk_body(fn_node):
+        if isinstance(sub, ast.Name):
+            if isinstance(sub.ctx, ast.Load):
+                loaded.add(sub.id)
+            else:
+                bound.add(sub.id)
+    return loaded - bound

@@ -5,7 +5,6 @@ from __future__ import annotations
 import glob
 import json
 import re
-import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
