@@ -140,6 +140,20 @@ SMOKES: Tuple[Smoke, ...] = (
         "scale with the neighborhood, not |V|",
     ),
     Smoke(
+        name="graph_deltas",
+        script="benchmarks/graph_deltas.py",
+        args=("--smoke",),
+        bench="BENCH_deltas.json",
+        prefix="deltas_",
+        # deltas_ego + deltas_merge + deltas_parity
+        min_rows=3,
+        doc="streamed edge batches merge-upgrade the served SGB stack "
+        "in place: post-merge logits bit-identical to a from-scratch "
+        "build of the delta'd graph; zero failed/shed/expired across "
+        "every GraphPlane version swap; a clean ego closure survives "
+        "the swap with zero retraces",
+    ),
+    Smoke(
         name="na_sharded",
         script="benchmarks/na_sharded.py",
         args=("--smoke",),
@@ -184,6 +198,18 @@ SMOKES: Tuple[Smoke, ...] = (
         "executables, never meshes; parity bit-exact per flow",
     ),
     Smoke(
+        name="deltas_sharded",
+        script="benchmarks/graph_deltas.py",
+        args=("--smoke", "--sharded"),
+        bench="BENCH_deltas.json",
+        prefix="deltas_sharded_",
+        min_rows=1,
+        doc="the same merge + parity + serving loop against an 8-way "
+        "mesh-sharded session: sharded splits mirrored by the merge, "
+        "merged logits bit-identical to a cold sharded build, zero "
+        "failed/shed/expired across every version swap",
+    ),
+    Smoke(
         name="ego_sharded",
         script="benchmarks/serve_ego.py",
         args=("--smoke", "--sharded"),
@@ -204,6 +230,7 @@ SUITES = {
         "serve_chaos",
         "sgb_scale",
         "serve_ego",
+        "graph_deltas",
     ),
     "multidevice": (
         "na_sharded",
@@ -211,6 +238,7 @@ SUITES = {
         "serve_sharded",
         "chaos_sharded",
         "ego_sharded",
+        "deltas_sharded",
     ),
 }
 

@@ -36,6 +36,7 @@ semantic-attention β) are injected via ``HGNNModel.ego_globals``.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -207,6 +208,7 @@ class EgoStats:
     feature_rows: int = 0
     adjacency_rows: int = 0
     bytes_read: int = 0
+    closure_hits: int = 0
 
     def reset(self) -> None:
         self.queries = 0
@@ -214,6 +216,7 @@ class EgoStats:
         self.feature_rows = 0
         self.adjacency_rows = 0
         self.bytes_read = 0
+        self.closure_hits = 0
 
     @property
     def rows_per_query(self) -> float:
@@ -227,6 +230,7 @@ class EgoStats:
             "feature_rows": self.feature_rows,
             "adjacency_rows": self.adjacency_rows,
             "bytes_read": self.bytes_read,
+            "closure_hits": self.closure_hits,
             "rows_per_query": round(self.rows_per_query, 2),
         }
 
@@ -246,6 +250,15 @@ class EgoPlanner:
     queries with sizes cycling through ``sample_sizes`` — pass the serving
     ``BatchPolicy.capacities`` as ``sample_sizes`` so the ladder is tuned
     for real block shapes.
+
+    ``closure_cache > 0`` bounds an LRU of computed ``(full, inner)``
+    closure sets keyed by the query's seed set — the substrate for
+    streamed-delta invalidation: :meth:`invalidate` drops exactly the
+    entries whose closure touches a dirty vertex, and :meth:`carry_from`
+    adopts a predecessor planner's clean entries across a graph-version
+    swap (a closure containing no dirty vertex expands over unchanged
+    rows only, so its sets are still exact on the new layouts). Default
+    ``0`` (off) preserves the stateless behavior.
     """
 
     def __init__(
@@ -258,6 +271,7 @@ class EgoPlanner:
         sample: int = 48,
         sample_sizes: Sequence[int] = (1, 4),
         seed: int = 0,
+        closure_cache: int = 0,
     ):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
@@ -281,6 +295,8 @@ class EgoPlanner:
             for sg in self.sgs
         }
         self.stats = EgoStats()
+        self.closure_cache = int(closure_cache)
+        self._closures: "OrderedDict[bytes, Tuple[Dict, Dict]]" = OrderedDict()
         if capacities is None:
             capacities = self._tune_capacities(
                 sample, tuple(sample_sizes), max_capacities, seed
@@ -362,6 +378,102 @@ class EgoPlanner:
             inner = {t: v for t, v in full.items()}
         return full, inner
 
+    def _cached_closure(
+        self, idx: np.ndarray, stats: EgoStats
+    ) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+        """``_closure`` behind the bounded LRU (identity when disabled).
+
+        Keyed on the sorted unique seed set, so permutations of the same
+        query hit. A hit skips the adjacency-row walk entirely — and the
+        stats honestly record zero adjacency reads for it."""
+        if not self.closure_cache:
+            return self._closure(idx, stats=stats)
+        key = np.unique(np.asarray(idx, dtype=np.int64)).tobytes()
+        hit = self._closures.get(key)
+        if hit is not None:
+            self._closures.move_to_end(key)
+            stats.closure_hits += 1
+            return hit
+        full, inner = self._closure(idx, stats=stats)
+        self._closures[key] = (full, inner)
+        while len(self._closures) > self.closure_cache:
+            self._closures.popitem(last=False)
+        return full, inner
+
+    def invalidate(self, dirty: Dict[str, np.ndarray]) -> int:
+        """Drop every cached closure that touches a dirty vertex.
+
+        ``dirty`` maps node type -> local ids whose neighborhood rows
+        changed (the merge engine's per-type dirty set). A closure whose
+        ``full`` sets avoid all dirty vertices expanded over rows the
+        delta did not touch, so it is still exact; everything else is
+        dropped and recomputed on next query. Returns the drop count."""
+        if not self._closures:
+            return 0
+        dsets = {
+            t: np.unique(np.asarray(v, dtype=np.int64))
+            for t, v in dirty.items()
+            if np.asarray(v).size
+        }
+        if not dsets:
+            return 0
+        drop = [
+            key
+            for key, (full, _inner) in self._closures.items()
+            if any(
+                full.get(t) is not None
+                and np.intersect1d(full[t], d, assume_unique=True).size
+                for t, d in dsets.items()
+            )
+        ]
+        for key in drop:
+            del self._closures[key]
+        return len(drop)
+
+    def carry_from(
+        self,
+        other: "EgoPlanner",
+        dirty: Optional[Dict[str, np.ndarray]] = None,
+    ) -> int:
+        """Adopt ``other``'s cached closures, minus any touching ``dirty``.
+
+        The graph-version swap path: the new planner (built over the
+        merged layouts) starts with the predecessor's clean closures, so
+        live queries over untouched neighborhoods skip the closure walk
+        from the first post-swap request. Requires matching topology-shape
+        statics — closures are only portable when the hop program that
+        produced them is identical. Returns the adopted count."""
+        if not self.closure_cache:
+            return 0
+        if (
+            other.node_types != self.node_types
+            or other.label_type != self.label_type
+            or other.depth != self.depth
+        ):
+            raise ValueError(
+                "closures are only portable between planners sharing "
+                "node types, label type, and depth"
+            )
+        dsets = {
+            t: np.unique(np.asarray(v, dtype=np.int64))
+            for t, v in (dirty or {}).items()
+            if np.asarray(v).size
+        }
+        adopted = 0
+        for key, pair in other._closures.items():
+            full = pair[0]
+            if any(
+                full.get(t) is not None
+                and np.intersect1d(full[t], d, assume_unique=True).size
+                for t, d in dsets.items()
+            ):
+                continue
+            self._closures[key] = pair
+            adopted += 1
+        while len(self._closures) > self.closure_cache:
+            self._closures.popitem(last=False)
+        return adopted
+
     # -- extraction ---------------------------------------------------------
 
     def _d_cap(self, sg, rows: np.ndarray) -> int:
@@ -424,7 +536,7 @@ class EgoPlanner:
         idx = np.asarray(idx, dtype=np.int64).ravel()
         st = self.stats
         st.queries += 1
-        full, inner = self._closure(idx, stats=st)
+        full, inner = self._cached_closure(idx, stats=st)
         need = {t: max(int(full[t].size), 1) for t in self.node_types}
         n_levels = len(self.capacities[self.node_types[0]])
         level = None

@@ -169,6 +169,63 @@ class HetGraph:
             )
         return self
 
+    def validate_delta(
+        self, edges: Dict[str, Tuple[np.ndarray, np.ndarray]]
+    ) -> None:
+        """Validate an *appended* edge batch in O(batch), not O(graph).
+
+        The streaming ingest path (``repro.stream``) calls this per delta
+        instead of re-running :meth:`validate` on the whole graph: only the
+        new ``{rel_name: (src, dst)}`` arrays are checked — known relation
+        name, matching 1-D integer arrays, and ids inside the endpoint
+        types' ranges. Collects every violation and raises one
+        ``ValueError`` (same contract as :meth:`validate`)."""
+        errs: List[str] = []
+        known = {r[1]: r for r in self.relations}
+        for name, pair in edges.items():
+            rel = known.get(name)
+            if rel is None:
+                errs.append(
+                    f"delta relation {name!r} not in graph relations "
+                    f"{sorted(known)}"
+                )
+                continue
+            if not (isinstance(pair, tuple) and len(pair) == 2):
+                errs.append(f"delta[{name!r}] is not a (src, dst) pair")
+                continue
+            src, dst = (np.asarray(a) for a in pair)
+            if len(src) != len(dst):
+                errs.append(
+                    f"delta[{name!r}]: src/dst length mismatch "
+                    f"({len(src)} vs {len(dst)})"
+                )
+            src_t, _, dst_t = rel
+            for ids, t, side in ((src, src_t, "src"), (dst, dst_t, "dst")):
+                if ids.ndim != 1:
+                    errs.append(
+                        f"delta[{name!r}] {side} ids must be 1-D, got "
+                        f"shape {ids.shape}"
+                    )
+                    continue
+                if not np.issubdtype(ids.dtype, np.integer):
+                    errs.append(
+                        f"delta[{name!r}] {side} ids dtype {ids.dtype} "
+                        "is not an integer type"
+                    )
+                    continue
+                if ids.size == 0:
+                    continue
+                lo, hi = int(ids.min()), int(ids.max())
+                if lo < 0 or hi >= self.num_nodes.get(t, 0):
+                    errs.append(
+                        f"delta[{name!r}] {side} ids [{lo}, {hi}] out of "
+                        f"range for {t!r} (num_nodes={self.num_nodes.get(t)})"
+                    )
+        if errs:
+            raise ValueError(
+                "HetGraph delta validation failed:\n  - " + "\n  - ".join(errs)
+            )
+
     @property
     def total_nodes(self) -> int:
         return sum(self.num_nodes[t] for t in self.node_types)
@@ -929,16 +986,24 @@ def build_relation_graphs(
     add_self_loops: bool = True,
     seed: int = 0,
     bucket_sizes: Sequence[int] | str | None = None,
+    rng: np.random.Generator | None = None,
+    only: Sequence[str] | None = None,
 ) -> List[AnySemanticGraph]:
     """SGB for relation-based models (RGAT): one semantic graph per relation
     whose destination type carries labels *or* whose messages feed a labeled
     type downstream. We emit every relation; the model decides which to use.
     With ``bucket_sizes`` the result graphs are degree-bucketed.
+
+    ``rng`` overrides the seed-derived generator (the delta-merge path
+    passes a draw-counting wrapper); ``only`` restricts the build to the
+    named relations — the incremental path rebuilds just the dirty slices.
     """
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed) if rng is None else rng
     offs = g.type_offsets()
     out = []
     for (src_t, name, dst_t) in g.relations:
+        if only is not None and name not in only:
+            continue
         src, dst = g.edges[name]
         gsrc = src.astype(np.int64) + offs[src_t]
         if add_self_loops and src_t == dst_t:
@@ -961,12 +1026,13 @@ def build_union_graph(
     add_self_loops: bool = True,
     seed: int = 0,
     bucket_sizes: Sequence[int] | str | None = None,
+    rng: np.random.Generator | None = None,
 ) -> Dict[str, AnySemanticGraph]:
     """SGB for Simple-HGN: one union graph per destination type containing
     the in-edges of *all* relations, with per-slot relation ids so the
     attention can add its edge-type term. Self-loops get their own type id.
     """
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed) if rng is None else rng
     offs = g.type_offsets()
     rel_ids = {name: i for i, (_, name, _) in enumerate(g.relations)}
     self_loop_id = len(rel_ids)
@@ -1052,6 +1118,7 @@ def build_metapath_graphs(
     cap_fanout: int = 4096,
     seed: int = 0,
     bucket_sizes: Sequence[int] | str | None = None,
+    rng: np.random.Generator | None = None,
 ) -> List[AnySemanticGraph]:
     """SGB for metapath-based models (HAN).
 
@@ -1060,7 +1127,7 @@ def build_metapath_graphs(
     suffixed ``_rev`` use the transposed edge list. Endpoints must share the
     metapath's end type. Self-loops are added (HAN aggregates v itself).
     """
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed) if rng is None else rng
     offs = g.type_offsets()
 
     def rel_pairs(name: str) -> Tuple[np.ndarray, np.ndarray, str, str]:

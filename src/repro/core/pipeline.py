@@ -50,6 +50,12 @@ class HGNNTask:
     labels: jax.Array
     splits: Dict[str, np.ndarray]
     sgs: list  # semantic graphs driving NA (for stats/benchmarks)
+    # the builder arguments that produced ``sgs`` — what the streamed-delta
+    # ingestor (repro.stream) needs to merge-upgrade the layouts in place
+    # and what a from-scratch rebuild must replay for bit-parity
+    sgb_kind: str = ""
+    sgb_args: dict = dataclasses.field(default_factory=dict)
+    metapaths: Optional[Dict[str, Sequence[str]]] = None
     _sessions: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )
@@ -263,6 +269,11 @@ def prepare(
         labels=jnp.asarray(g.labels),
         splits=_splits(g.num_nodes[g.label_type], seed),
         sgs=sgs,
+        sgb_kind=entry.sgb_kind,
+        sgb_args=dict(
+            max_degree=max_degree, seed=seed, bucket_sizes=bucket_sizes
+        ),
+        metapaths=dict(mps) if mps else None,
     )
 
 

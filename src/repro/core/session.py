@@ -254,6 +254,29 @@ class InferenceSession:
             self._ego_exes[ego_batch.sig] = exe
         return exe
 
+    def adopt_ego_cache(self, other: "InferenceSession") -> int:
+        """Adopt ``other``'s compiled ego executables (graph-version swap).
+
+        Ego executables close over the model and flow only — every graph
+        table rides in as an :class:`EgoBatch` pytree argument, and
+        signatures are value-hashed shape statics — so an executable
+        compiled on a previous graph version serves the successor
+        unchanged. Requires the SAME model object and an equal flow;
+        existing entries are never overwritten. Returns the adopted count
+        (``DISPATCH["ego_traces"]`` does not tick for adopted entries —
+        that counter is the proof clean closures were not retraced)."""
+        if other.model is not self.model or other.flow != self.flow:
+            raise ValueError(
+                "ego executables are only portable between sessions "
+                "sharing the model object and flow config"
+            )
+        adopted = 0
+        for sig, exe in other._ego_exes.items():
+            if sig not in self._ego_exes:
+                self._ego_exes[sig] = exe
+                adopted += 1
+        return adopted
+
     def query_ego(self, params, idx, ego_globals=_UNSET) -> jax.Array:
         """Logits for one padded query block via the ego-subgraph path.
 

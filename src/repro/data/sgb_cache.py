@@ -101,6 +101,18 @@ def graph_fingerprint(g: HetGraph) -> str:
     return fp
 
 
+def structure_hash(g: HetGraph) -> str:
+    """Public structure hash of a graph — the fingerprint every cache key
+    embeds. The streaming delta path (``repro.stream``) builds a NEW
+    ``HetGraph`` per applied delta precisely so this hash (and therefore
+    :func:`cache_key`) changes: a delta'd graph can never hit the
+    pre-delta cache entry, and two graphs compare structurally equal iff
+    their hashes match. Same memoization caveat as the private helper —
+    never mutate ``edges`` in place on a graph that has already been
+    hashed."""
+    return graph_fingerprint(g)
+
+
 def cache_key(
     g: HetGraph,
     kind: str,

@@ -32,7 +32,7 @@ from repro.serve.health import (
     TransientDispatchError,
 )
 from repro.serve.load import Workload, make_workload, run_serial, run_workload
-from repro.serve.plane import WeightPlane, param_avals
+from repro.serve.plane import GraphPlane, WeightPlane, param_avals
 from repro.serve.queueing import (
     BatchPolicy,
     QueryBlock,
@@ -52,6 +52,7 @@ __all__ = [
     "FaultPlan",
     "FaultRule",
     "FlushTimeout",
+    "GraphPlane",
     "HealthReport",
     "InlineExecutor",
     "QueryBlock",

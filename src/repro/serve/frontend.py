@@ -72,7 +72,7 @@ from repro.serve.health import (
     SupervisorPolicy,
     TenantUnpublishedError,
 )
-from repro.serve.plane import WeightPlane
+from repro.serve.plane import GraphPlane, WeightPlane
 from repro.serve.queueing import (
     BatchPolicy,
     QueryBlock,
@@ -196,6 +196,15 @@ class ServeFrontend:
     executor call ``start()`` (or use the context manager) before
     submitting; with ``InlineExecutor`` just ``submit`` + ``pump``.
 
+    ``session`` may instead be a :class:`~repro.serve.plane.GraphPlane`
+    — the live-graph-evolution mode: every primary block checks out the
+    plane's CURRENT session at dispatch time, so a streamed-delta publish
+    swaps the graph under live traffic with zero failed or stranded
+    requests (in-flight blocks finish on the version they checked out;
+    see ``src/repro/serve/README.md``). The fallback session, when given,
+    stays pinned to the construction-time graph — degraded answers come
+    from a known-good version by design.
+
     ``fallback`` is an optional second session (same model/batch, a
     cheaper pre-compiled flow) serving degraded blocks when the primary
     fails — its whole capacity ladder is prewarmed here, at construction,
@@ -217,6 +226,14 @@ class ServeFrontend:
         supervisor: Optional[SupervisorPolicy] = None,
         faults: Optional[FaultPlan] = None,
     ):
+        self.graphs: Optional[GraphPlane] = None
+        if isinstance(session, GraphPlane):
+            # live graph evolution: serve whatever version the plane has
+            # published at each block's dispatch; register the policy's
+            # ladder so successors are prewarmed BEFORE they go current
+            self.graphs = session
+            session = self.graphs.current()
+            self.graphs.register_capacities(policy.capacities)
         if not isinstance(plane, WeightPlane):
             params = plane
             plane = WeightPlane(params, stream=session.donate_params)
@@ -328,20 +345,26 @@ class ServeFrontend:
             self.faults.fire("dispatch", self._ctx(
                 "dispatch", tenant=blk.tenant, block=blk, engine=engine,
             ))
-        if self._ego and engine == "primary":
-            gl = self._ego_globals_for(blk.tenant, params)
+        if (
+            self._ego
+            and engine == "primary"
+            and session.ego_planner is not None
+        ):
+            gl = self._ego_globals_for(blk.tenant, params, session)
             return session.query_ego(params, blk.idx, ego_globals=gl)
         return session.query(params, blk.idx)
 
-    def _ego_globals_for(self, tenant: str, params):
+    def _ego_globals_for(self, tenant: str, params, session=None):
         """Per-tenant ``model.ego_globals`` cache keyed by the plane's
         version token (stream-mode checkouts materialize FRESH buffers per
         block, so caching by parameter identity would recompute the
-        full-graph globals pass every block)."""
-        tok = self.plane.version_token(tenant)
+        full-graph globals pass every block) AND the serving session's
+        identity — a graph-plane publish swaps the session object, and
+        the globals pass must rerun over the new graph batch."""
+        sess = self.session if session is None else session
+        tok = (self.plane.version_token(tenant), id(sess))
         ent = self._ego_globals.get(tenant)
         if ent is None or ent[0] != tok:
-            sess = self.session
             ent = (tok, sess.model.ego_globals(
                 params, sess.graph_batch, sess.flow,
             ))
@@ -370,9 +393,15 @@ class ServeFrontend:
         failed here. NEVER raises for a per-block serving failure."""
         primary_allowed = self.fallback is None or self.breaker.allow_primary()
         primary_exc: Optional[BaseException] = None
+        # resolve the primary ONCE per block: a graph-plane publish between
+        # blocks changes what this returns; retries within the block stay
+        # pinned to the version it checked out
+        primary = (
+            self.graphs.current() if self.graphs is not None else self.session
+        )
         if primary_allowed:
             try:
-                out = self._dispatch_with_retry(blk, self.session, "primary")
+                out = self._dispatch_with_retry(blk, primary, "primary")
             except TenantUnpublishedError as exc:
                 # the tenant is gone, not the flow: fail this block only,
                 # never count it against the breaker

@@ -18,7 +18,8 @@ dict lookup.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+import threading
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -121,6 +122,93 @@ class WeightPlane:
 
     def __len__(self) -> int:
         return len(self._versions)
+
+
+class GraphPlane:
+    """Monotonically versioned GRAPH sessions behind one serving handle.
+
+    The structural sibling of :class:`WeightPlane`: where the weight
+    plane routes blocks across parameter versions of one graph, the
+    graph plane swaps the graph itself. The streamed-delta ingestor
+    merges version ``v``'s layouts into ``v + 1``, builds a successor
+    ``InferenceSession`` over them, and ``publish``-es it; serving code
+    resolves the session once per query block via :meth:`checkout`.
+
+    Checkout semantics — the serving-parity contract: a block that
+    checked out version ``v`` runs to completion on ``v`` even if
+    ``v + 1`` publishes mid-flight (the old session, layouts, and device
+    mirrors stay alive for exactly as long as some block still references
+    them — plain refcounting, no epoch bookkeeping). New arrivals pick up
+    ``v + 1`` at their own checkout. No request is ever failed or
+    stranded by a version swap.
+
+    ``publish`` validates the successor's ``out_shape`` against the
+    plane's reference (deltas are additive-only, so a shape change means
+    the caller swapped in a different task's session) and prewarms the
+    registered query-capacity ladder BEFORE taking the swap lock — the
+    expensive compiles happen off to the side while version ``v`` keeps
+    serving, and the swap itself is a pointer assignment.
+    """
+
+    def __init__(self, session):
+        self._lock = threading.Lock()
+        self._session = session
+        self._version = 0
+        self._out_shape = tuple(session.out_shape)
+        self._capacities: Tuple[int, ...] = ()
+
+    def register_capacities(self, capacities: Sequence[int]) -> None:
+        """Declare the query-block capacity ladder every published session
+        must have compiled executables for (the serving ``BatchPolicy``'s
+        capacities). The current session is prewarmed immediately; future
+        ``publish`` calls prewarm the successor before the swap."""
+        caps = tuple(sorted({int(c) for c in capacities}))
+        session = self.current()
+        self._capacities = caps
+        if caps:
+            session.prewarm(caps)
+
+    def publish(self, session) -> int:
+        """Install ``session`` as the next graph version and return its
+        version number. Validates ``out_shape`` against the reference and
+        prewarms the registered capacity ladder outside the swap lock."""
+        shape = tuple(session.out_shape)
+        if shape != self._out_shape:
+            raise ValueError(
+                f"successor session out_shape {shape} does not match this "
+                f"plane's reference {self._out_shape} — graph deltas are "
+                "additive-only, so a published successor must serve the "
+                "same target set and class count"
+            )
+        if self._capacities:
+            session.prewarm(self._capacities)
+        with self._lock:
+            self._version += 1
+            self._session = session
+            return self._version
+
+    def checkout(self):
+        """The ``(version, session)`` pair to run one query block with —
+        one atomic read; the block holds the session reference (NOT the
+        plane) for its whole lifetime, so a mid-flight publish never
+        retargets it."""
+        with self._lock:
+            return self._version, self._session
+
+    def current(self):
+        """The currently published session (convenience over
+        :meth:`checkout` when the version number is not needed)."""
+        with self._lock:
+            return self._session
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._version
+
+    @property
+    def out_shape(self) -> Tuple[int, ...]:
+        return self._out_shape
 
 
 def _aval_diff(ref: Tuple, got: Tuple) -> str:

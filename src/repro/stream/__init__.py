@@ -1,0 +1,26 @@
+"""``repro.stream`` — incremental SGB delta ingestion under live traffic.
+
+Streamed edge inserts (and node-feature updates) against a served
+bucketed semantic-graph stack, merge-upgraded in place instead of
+rebuilt cold: see ``repro.stream.delta`` (typed deltas + the append-only
+log), ``repro.stream.merge`` (the clean / absorb / spill / full-rebuild
+merge engine with its bit-parity contract), and ``repro.stream.ingest``
+(the end-to-end validate → merge → successor session → ``GraphPlane``
+publish path). ``src/repro/core/README.md`` documents the parity
+contract; ``src/repro/serve/README.md`` the serving-side version-swap
+semantics.
+"""
+from repro.stream.delta import DeltaLog, GraphDelta, apply_to_graph
+from repro.stream.ingest import IngestReport, StreamIngestor, replay
+from repro.stream.merge import MergeStats, apply_delta
+
+__all__ = [
+    "DeltaLog",
+    "GraphDelta",
+    "IngestReport",
+    "MergeStats",
+    "StreamIngestor",
+    "apply_delta",
+    "apply_to_graph",
+    "replay",
+]

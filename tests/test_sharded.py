@@ -265,3 +265,69 @@ def test_sharded_ego_query_parity(tasks):
         assert d["ego_calls"] + d["ego_fallback"] == len(queries)
         assert d["ego_traces"] == 0, "ego retraced after warmup"
         assert d["mesh_lookups"] == 0
+
+
+def test_sharded_ego_under_deltas():
+    """8-way compose with ``repro.stream``: a streamed edge batch
+    merge-upgrades the sharded stack in place (the merge mirrors the
+    session's shard splits), the successor session's full forward is
+    bit-identical to a cold sharded build of the delta'd graph — and a
+    warm ego closure the delta did NOT touch survives the version swap
+    with its carried closure and adopted executable: zero new
+    ``ego_traces``."""
+    from repro.stream import StreamIngestor
+    from repro.stream.merge import _degrees_of
+
+    with _mesh(8):
+        task = pipeline.prepare(
+            "rgat", "imdb", scale=0.04, max_degree=None, seed=0,
+            bucket_sizes=(4, 8, 16),
+        )
+        sess = task.compile(KERNEL)
+        assert sess.mesh_info is not None and sess.mesh_info[2] == 8
+        sess.enable_ego(seed=0, sample_sizes=(1, 4))
+        ing = StreamIngestor(task, sess)
+        rng = np.random.default_rng(7)
+        qa = np.arange(2, dtype=np.int32)
+        np.asarray(sess.query_ego(task.params, qa))  # warm trace + closure
+        full_a, _ = sess.ego_planner._closure(qa.astype(np.int64))
+
+        # an absorbable target OUTSIDE the warm closure: guaranteed
+        # absorb tier, guaranteed not to invalidate qa's closure
+        g = ing.graph
+        s_t, rel, d_t = g.relations[0]
+        sg = next(s for s in ing.sgs if s.name == rel)
+        bucket_of, row_of = sg.row_lookup()
+        avoid = set(full_a.get(d_t, np.zeros(0, np.int64)).tolist())
+        cand = np.array(
+            [i for i in range(g.num_nodes[d_t]) if i not in avoid],
+            dtype=np.int64,
+        )
+        deg = _degrees_of(sg, cand, bucket_of, row_of)
+        caps = np.asarray(sg.bucket_capacities)[bucket_of[cand]]
+        tgt = int(cand[deg + 1 <= caps][0])
+
+        traces0 = flows.DISPATCH["ego_traces"]
+        rep = ing.ingest({rel: (
+            rng.integers(0, g.num_nodes[s_t], 1),
+            np.array([tgt], dtype=np.int64),
+        )})
+        assert rep.stats.absorbed_slices >= 1
+        assert not rep.stats.full_rebuild
+        assert rep.closures_carried >= 1 and rep.exes_adopted >= 1
+
+        got = np.asarray(ing.session.query_ego(task.params, qa))
+        assert flows.DISPATCH["ego_traces"] == traces0, (
+            "clean ego closure retraced across the sharded version swap"
+        )
+        assert ing.session.ego_planner.stats.closure_hits >= 1
+
+        cold = pipeline.prepare(
+            "rgat", ing.graph, max_degree=None, seed=0,
+            bucket_sizes=(4, 8, 16),
+        )
+        ref = np.asarray(cold.compile(KERNEL)(task.params))
+        np.testing.assert_array_equal(
+            np.asarray(ing.session(task.params)), ref
+        )
+        np.testing.assert_allclose(got, ref[qa], rtol=0, atol=1e-5)

@@ -1,0 +1,533 @@
+"""``repro.stream`` — the incremental delta-ingestion contract.
+
+The merge in ``repro.stream.merge`` is EXACT, not approximate: every tier
+(clean reuse, in-place absorb, per-slice spill rebuild, full-rebuild
+fallback) must produce a stack whose logits are bit-identical to a
+from-scratch ``pipeline.prepare`` of the delta'd graph. On top of that:
+``HetGraph.validate_delta`` rejects malformed batches in O(batch);
+``structure_hash`` re-fingerprints every delta'd graph (no stale SGB
+cache hits); ``GraphPlane`` swaps versions without stranding a request;
+and the ego planner's closure cache carries clean closures across swaps
+with ``DISPATCH["ego_traces"]`` as the no-retrace proof.
+"""
+import numpy as np
+import pytest
+
+from repro.core import flows, pipeline
+from repro.core.ego import EgoPlanner
+from repro.core.flows import FlowConfig
+from repro.data import sgb_cache
+from repro.serve import (
+    BatchPolicy,
+    FakeClock,
+    GraphPlane,
+    InlineExecutor,
+    ServeFrontend,
+)
+from repro.stream import DeltaLog, StreamIngestor, apply_to_graph, replay
+
+FUSED = FlowConfig("fused", prune_k=4)
+
+
+@pytest.fixture(scope="module")
+def task():
+    # max_degree=None: no degree-cap RNG, so deltas exercise the
+    # absorb/spill tiers instead of falling back to a full rebuild
+    return pipeline.prepare("rgat", "imdb", scale=0.05, max_degree=None,
+                            seed=0)
+
+
+@pytest.fixture()
+def ingestor(task):
+    sess = task.compile(FUSED)
+    return StreamIngestor(task, sess)
+
+
+def _edges(rng, g, rel_names=None, n=6):
+    out = {}
+    for s_t, name, d_t in g.relations:
+        if rel_names is not None and name not in rel_names:
+            continue
+        out[name] = (
+            rng.integers(0, g.num_nodes[s_t], n),
+            rng.integers(0, g.num_nodes[d_t], n),
+        )
+    return out
+
+
+def _cold_logits(model, graph, flow, params, **sgb_args):
+    cold = pipeline.prepare(model, graph, **sgb_args)
+    return np.asarray(cold.compile(flow)(params))
+
+
+# --------------------------------------------------------------------------
+# validate_delta: O(batch) accept/reject
+# --------------------------------------------------------------------------
+
+class TestValidateDelta:
+    def test_accepts_well_formed_batch(self, task, rng):
+        task.graph.validate_delta(_edges(rng, task.graph))  # no raise
+
+    def test_accepts_empty_arrays(self, task):
+        s_t, rel, d_t = task.graph.relations[0]
+        task.graph.validate_delta(
+            {rel: (np.zeros(0, np.int64), np.zeros(0, np.int64))}
+        )
+
+    def test_rejects_unknown_relation(self, task):
+        with pytest.raises(ValueError, match="not in graph relations"):
+            task.graph.validate_delta(
+                {"NOPE": (np.array([0]), np.array([0]))}
+            )
+
+    def test_rejects_length_mismatch(self, task):
+        _, rel, _ = task.graph.relations[0]
+        with pytest.raises(ValueError, match="length mismatch"):
+            task.graph.validate_delta(
+                {rel: (np.array([0, 1]), np.array([0]))}
+            )
+
+    def test_rejects_out_of_range_ids(self, task):
+        g = task.graph
+        s_t, rel, d_t = g.relations[0]
+        bad = np.array([g.num_nodes[d_t]], dtype=np.int64)
+        with pytest.raises(ValueError, match="out of range"):
+            g.validate_delta({rel: (np.array([0], dtype=np.int64), bad)})
+        with pytest.raises(ValueError, match="out of range"):
+            g.validate_delta(
+                {rel: (np.array([-1], dtype=np.int64),
+                       np.array([0], dtype=np.int64))}
+            )
+
+    def test_rejects_float_and_2d_ids(self, task):
+        _, rel, _ = task.graph.relations[0]
+        with pytest.raises(ValueError, match="not an integer type"):
+            task.graph.validate_delta(
+                {rel: (np.array([0.5]), np.array([0], dtype=np.int64))}
+            )
+        with pytest.raises(ValueError, match="must be 1-D"):
+            task.graph.validate_delta(
+                {rel: (np.array([[0]]), np.array([0], dtype=np.int64))}
+            )
+
+    def test_collects_every_violation(self, task):
+        _, rel, _ = task.graph.relations[0]
+        with pytest.raises(ValueError) as ei:
+            task.graph.validate_delta({
+                "NOPE": (np.array([0]), np.array([0])),
+                rel: (np.array([0, 1]), np.array([0])),
+            })
+        msg = str(ei.value)
+        assert "NOPE" in msg and "length mismatch" in msg
+
+    def test_rejected_batch_leaves_ingestor_untouched(self, ingestor):
+        v0, seq0, g0 = ingestor.version, ingestor.log.seq, ingestor.graph
+        with pytest.raises(ValueError):
+            ingestor.ingest({"NOPE": (np.array([0]), np.array([0]))})
+        assert ingestor.version == v0
+        assert ingestor.log.seq == seq0
+        assert ingestor.graph is g0
+
+
+# --------------------------------------------------------------------------
+# structure_hash: delta'd graphs can never hit the pre-delta cache entry
+# --------------------------------------------------------------------------
+
+class TestStructureHash:
+    def test_stable_on_same_graph(self, task):
+        assert (sgb_cache.structure_hash(task.graph)
+                == sgb_cache.structure_hash(task.graph))
+
+    def test_delta_changes_hash_and_cache_key(self, task, rng):
+        g = task.graph
+        log = DeltaLog()
+        delta = log.append(_edges(rng, g, n=3))
+        g2 = apply_to_graph(g, delta)
+        assert (sgb_cache.structure_hash(g2)
+                != sgb_cache.structure_hash(g))
+        k1 = sgb_cache.cache_key(g, task.sgb_kind, **task.sgb_args)
+        k2 = sgb_cache.cache_key(g2, task.sgb_kind, **task.sgb_args)
+        assert k1 != k2
+
+    def test_feature_only_delta_keeps_structure_hash(self, task, rng):
+        g = task.graph
+        t = g.node_types[0]
+        feats = {t: (np.array([0], dtype=np.int64),
+                     rng.normal(size=(1, g.features[t].shape[1]))
+                     .astype(g.features[t].dtype))}
+        delta = DeltaLog().append({}, feats)
+        g2 = apply_to_graph(g, delta)
+        # structure untouched -> same layouts are reusable; the SGB cache
+        # fingerprints structure, not features
+        assert (sgb_cache.structure_hash(g2)
+                == sgb_cache.structure_hash(g))
+
+    def test_every_ingest_reports_fresh_hash(self, ingestor, rng):
+        seen = {sgb_cache.structure_hash(ingestor.graph)}
+        for _ in range(3):
+            rep = ingestor.ingest(_edges(rng, ingestor.graph, n=2))
+            assert rep.structure_hash not in seen
+            assert rep.structure_hash == sgb_cache.structure_hash(
+                ingestor.graph
+            )
+            seen.add(rep.structure_hash)
+
+
+# --------------------------------------------------------------------------
+# DeltaLog
+# --------------------------------------------------------------------------
+
+class TestDeltaLog:
+    def test_seq_is_monotone_and_since_slices(self, task, rng):
+        log = DeltaLog()
+        d1 = log.append(_edges(rng, task.graph, n=1))
+        d2 = log.append(_edges(rng, task.graph, n=2))
+        assert (d1.seq, d2.seq) == (1, 2)
+        assert log.seq == 2 and len(log) == 2
+        assert [d.seq for d in log.since(1)] == [2]
+
+    def test_apply_to_graph_is_pure(self, task, rng):
+        g = task.graph
+        _, rel, _ = g.relations[0]
+        before = g.edges[rel][0].copy()
+        delta = DeltaLog().append(_edges(rng, g, rel_names=(rel,), n=4))
+        g2 = apply_to_graph(g, delta)
+        np.testing.assert_array_equal(g.edges[rel][0], before)
+        assert len(g2.edges[rel][0]) == len(before) + 4
+        # untouched relations share arrays with the predecessor
+        for _, name, _ in g.relations:
+            if name != rel:
+                assert g2.edges[name][0] is g.edges[name][0]
+
+    def test_unknown_relation_raises(self, task):
+        delta = DeltaLog().append({})
+        object.__setattr__(delta, "edges",
+                           {"NOPE": (np.array([0]), np.array([0]))})
+        with pytest.raises(KeyError):
+            apply_to_graph(task.graph, delta)
+
+
+# --------------------------------------------------------------------------
+# merge tiers: bit-parity against the cold rebuild, per tier
+# --------------------------------------------------------------------------
+
+class TestMergeParity:
+    def _ingest_and_check(self, task, ingestor, edges, flow=FUSED):
+        rep = ingestor.ingest(edges)
+        got = np.asarray(ingestor.session(task.params))
+        ref = _cold_logits("rgat", ingestor.graph, flow, task.params,
+                           max_degree=None, seed=0)
+        np.testing.assert_array_equal(got, ref)
+        return rep
+
+    def test_absorb_tier_bit_parity(self, task, ingestor, rng):
+        rep = self._ingest_and_check(
+            task, ingestor, _edges(rng, ingestor.graph, n=2)
+        )
+        assert rep.stats.absorbed_slices >= 1
+        assert not rep.stats.full_rebuild
+
+    def test_spill_tier_bit_parity(self, task, ingestor, rng):
+        # overload one target far past its bucket capacity
+        g = ingestor.graph
+        s_t, rel, d_t = g.relations[0]
+        sg = next(s for s in ingestor.sgs if s.name == rel)
+        cap = max(sg.bucket_capacities)
+        n = int(cap) + 8
+        edges = {rel: (rng.integers(0, g.num_nodes[s_t], n),
+                       np.full(n, 0, dtype=np.int64))}
+        rep = self._ingest_and_check(task, ingestor, edges)
+        assert rep.stats.spilled_slices >= 1
+        assert not rep.stats.full_rebuild
+
+    def test_stacked_deltas_stay_exact(self, task, ingestor, rng):
+        for i in range(4):
+            rels = (ingestor.graph.relations[i % 2][1],)
+            self._ingest_and_check(
+                task, ingestor, _edges(rng, ingestor.graph, rels, n=3)
+            )
+        assert ingestor.version == 4
+        assert ingestor.log.seq == 4
+
+    def test_clean_slices_are_same_objects(self, task, ingestor, rng):
+        g = ingestor.graph
+        _, rel, _ = g.relations[0]
+        before = {s.name: s for s in ingestor.sgs}
+        rep = ingestor.ingest(_edges(rng, g, rel_names=(rel,), n=2))
+        assert rep.stats.clean_slices == len(ingestor.sgs) - 1
+        for s in ingestor.sgs:
+            if s.name != rel:
+                assert s is before[s.name]
+
+    def test_patched_grouped_matches_rebuilt_grouped(self, task, rng):
+        # the absorb tier patches grouped tile stacks in place (COW);
+        # the patched arrays must equal a from-scratch grouping
+        sess = task.compile(FlowConfig("fused_kernel", prune_k=4))
+        ing = StreamIngestor(task, sess)
+        rep = ing.ingest(_edges(rng, ing.graph, n=2))
+        assert rep.stats.absorbed_slices >= 1
+        cold = pipeline.prepare("rgat", ing.graph, max_degree=None, seed=0)
+        for got_sg, ref_sg in zip(ing.sgs, cold.sgs):
+            for key in got_sg._grouped:
+                got, ref = got_sg._grouped[key], ref_sg.grouped(*key)
+                for f in ("nbr", "msk", "ety", "step_row", "step_dt",
+                          "step_ndt", "step_bucket", "caps", "caps_pad",
+                          "row_targets", "perm"):
+                    np.testing.assert_array_equal(
+                        getattr(got, f), getattr(ref, f), err_msg=f
+                    )
+
+    def test_feature_update_changes_logits_exactly(self, task, rng):
+        sess = task.compile(FUSED)
+        ing = StreamIngestor(task, sess)
+        g = ing.graph
+        t = g.node_types[0]
+        new_row = rng.normal(size=(1, g.features[t].shape[1])).astype(
+            g.features[t].dtype
+        )
+        ing.ingest({}, {t: (np.array([0], dtype=np.int64), new_row)})
+        got = np.asarray(ing.session(task.params))
+        ref = _cold_logits("rgat", ing.graph, FUSED, task.params,
+                           max_degree=None, seed=0)
+        np.testing.assert_array_equal(got, ref)
+
+
+class TestMergeParityOtherKinds:
+    def test_union_mid_row_ety_insertion(self, rng):
+        # simple_hgn unions every relation into per-dst-type slices: a
+        # delta on one relation inserts slots MID-row (slot order is
+        # ety-major) — the absorb repack must reproduce builder order
+        task = pipeline.prepare("simple_hgn", "imdb", scale=0.05,
+                                max_degree=None, seed=0)
+        ing = StreamIngestor(task, task.compile(FUSED))
+        g = ing.graph
+        first_rel = g.relations[0][1]
+        rep = ing.ingest(_edges(rng, g, rel_names=(first_rel,), n=3))
+        assert not rep.stats.full_rebuild
+        got = np.asarray(ing.session(task.params))
+        ref = _cold_logits("simple_hgn", ing.graph, FUSED, task.params,
+                           max_degree=None, seed=0)
+        np.testing.assert_array_equal(got, ref)
+
+    def test_metapath_chain_rebuild(self, rng):
+        # han composes metapaths: a delta on a base relation rebuilds
+        # every slice whose chain touches it; untouched chains stay clean
+        task = pipeline.prepare("han", "imdb", scale=0.05,
+                                max_degree=None, seed=0)
+        ing = StreamIngestor(task, task.compile(FUSED))
+        g = ing.graph
+        _, rel, _ = g.relations[0]
+        rep = ing.ingest(_edges(rng, g, rel_names=(rel,), n=2))
+        got = np.asarray(ing.session(task.params))
+        ref = _cold_logits("han", ing.graph, FUSED, task.params,
+                           max_degree=None, seed=0,
+                           metapaths=task.metapaths)
+        np.testing.assert_array_equal(got, ref)
+        st = rep.stats
+        assert st.rebuilt_slices + st.clean_slices >= 1 or st.full_rebuild
+
+    def test_full_rebuild_fallback_parity(self, rng):
+        # capped degree: a spilled slice's rebuild consumes RNG draws
+        # (down-sampling), so the merge falls back to a full rebuild —
+        # parity must survive the fallback
+        task = pipeline.prepare("rgat", "imdb", scale=0.05, max_degree=4,
+                                seed=0)
+        ing = StreamIngestor(task, task.compile(FUSED))
+        g = ing.graph
+        s_t, rel, d_t = g.relations[0]
+        n = 64  # far past any bucket capacity at max_degree=4
+        edges = {rel: (rng.integers(0, g.num_nodes[s_t], n),
+                       np.full(n, 0, dtype=np.int64))}
+        rep = ing.ingest(edges)
+        assert rep.stats.full_rebuild
+        assert rep.stats.full_rebuild_reason
+        got = np.asarray(ing.session(task.params))
+        ref = _cold_logits("rgat", ing.graph, FUSED, task.params,
+                           max_degree=4, seed=0)
+        np.testing.assert_array_equal(got, ref)
+
+
+# --------------------------------------------------------------------------
+# GraphPlane: versioned swap semantics
+# --------------------------------------------------------------------------
+
+class TestGraphPlane:
+    def test_publish_bumps_version_and_checkout_pins(self, task):
+        s0 = task.compile(FUSED)
+        plane = GraphPlane(s0)
+        assert plane.version == 0
+        v, sess = plane.checkout()
+        assert (v, sess) == (0, s0)
+        s1 = task.compile(FUSED)
+        assert plane.publish(s1) == 1
+        assert plane.current() is s1
+        # the old checkout still references version 0's session
+        assert sess is s0
+
+    def test_out_shape_mismatch_rejected(self, task):
+        s0 = task.compile(FUSED)
+        plane = GraphPlane(s0)
+
+        class Fake:
+            out_shape = (1, 1)
+
+        with pytest.raises(ValueError, match="additive-only"):
+            plane.publish(Fake())
+        assert plane.version == 0 and plane.current() is s0
+
+    def test_frontend_swap_strands_nothing(self, task, ingestor, rng):
+        fe = ServeFrontend(
+            ingestor.plane, task.params,
+            policy=BatchPolicy(capacities=(1, 4)),
+            clock=FakeClock(), executor=InlineExecutor(),
+        )
+        assert fe.graphs is ingestor.plane
+        n_tgt = task.batch.num_targets
+        futs = []
+        for i in range(3):
+            futs += [fe.submit(rng.integers(0, n_tgt, 2)) for _ in range(2)]
+            fe.pump(force=True)
+            ingestor.ingest(_edges(rng, ingestor.graph, n=2))
+        last_q = rng.integers(0, n_tgt, 2)
+        futs.append(fe.submit(last_q))
+        fe.pump(force=True)
+        fe.close()
+        st = fe.stats
+        assert st.failed == 0 and st.shed == 0 and st.expired == 0
+        assert st.completed == st.submitted == len(futs)
+        assert all(f.done() for f in futs)
+        # post-swap blocks are served by the new version's session, and
+        # results match the LIVE graph's cold reference
+        ref = _cold_logits("rgat", ingestor.graph, FUSED, task.params,
+                           max_degree=None, seed=0)
+        np.testing.assert_array_equal(futs[-1].result(0), ref[last_q])
+
+    def test_replay_helper(self, task, ingestor, rng):
+        deltas = [_edges(rng, ingestor.graph, n=1) for _ in range(3)]
+        reports = replay(ingestor, deltas)
+        assert [r.version for r in reports] == [1, 2, 3]
+
+
+# --------------------------------------------------------------------------
+# ego continuity: closures + executables survive version swaps
+# --------------------------------------------------------------------------
+
+class TestEgoContinuity:
+    def _warm(self, task, closure_cache=8):
+        sess = task.compile(FUSED)
+        sess.enable_ego(seed=0, sample_sizes=(1, 4))
+        sess.ego_planner.closure_cache = closure_cache
+        ing = StreamIngestor(task, sess, closure_cache=closure_cache)
+        return ing, sess
+
+    def test_clean_closure_zero_retraces(self, task, rng):
+        ing, sess = self._warm(task)
+        qa = np.arange(2, dtype=np.int32)
+        want = np.asarray(sess.query_ego(task.params, qa))
+        full_a, _ = sess.ego_planner._closure(qa.astype(np.int64))
+        # a delta whose dirty set misses qa's closure entirely
+        g = ing.graph
+        s_t, rel, d_t = g.relations[0]
+        avoid = set(full_a.get(d_t, np.zeros(0, np.int64)).tolist())
+        tgt = next(i for i in range(g.num_nodes[d_t]) if i not in avoid)
+        traces0 = flows.DISPATCH["ego_traces"]
+        rep = ing.ingest({rel: (
+            rng.integers(0, g.num_nodes[s_t], 1),
+            np.array([tgt], dtype=np.int64),
+        )})
+        assert rep.closures_carried >= 1
+        assert rep.exes_adopted >= 1
+        got = np.asarray(ing.session.query_ego(task.params, qa))
+        assert flows.DISPATCH["ego_traces"] == traces0, (
+            "clean ego closure retraced across the version swap"
+        )
+        assert ing.session.ego_planner.stats.closure_hits >= 1
+        np.testing.assert_array_equal(got, want)
+
+    def test_dirty_closure_recomputes(self, task, rng):
+        ing, sess = self._warm(task)
+        qa = np.arange(2, dtype=np.int32)
+        np.asarray(sess.query_ego(task.params, qa))
+        full_a, _ = sess.ego_planner._closure(qa.astype(np.int64))
+        g = ing.graph
+        s_t, rel, d_t = g.relations[0]
+        dirty_tgt = int(full_a[d_t][0])
+        cap = max(next(s for s in ing.sgs if s.name == rel)
+                  .bucket_capacities)
+        n = int(cap) + 8  # force the slice to spill: rows really move
+        ing.ingest({rel: (
+            rng.integers(0, g.num_nodes[s_t], n),
+            np.full(n, dirty_tgt, dtype=np.int64),
+        )})
+        got = np.asarray(ing.session.query_ego(task.params, qa))
+        ref = _cold_logits("rgat", ing.graph, FUSED, task.params,
+                           max_degree=None, seed=0)
+        np.testing.assert_allclose(got, ref[qa], rtol=0, atol=1e-5)
+
+    def test_interleaved_inserts_and_queries(self, task, rng):
+        ing, sess = self._warm(task)
+        qa = np.arange(2, dtype=np.int32)
+        for i in range(3):
+            ing.ingest(_edges(rng, ing.graph, n=2))
+            got = np.asarray(ing.session.query_ego(task.params, qa))
+            ref = _cold_logits("rgat", ing.graph, FUSED, task.params,
+                               max_degree=None, seed=0)
+            np.testing.assert_allclose(got, ref[qa], rtol=0, atol=1e-5)
+
+
+class TestClosureCache:
+    def test_lru_hit_and_eviction(self, task):
+        planner = EgoPlanner(task.batch, depth=2, closure_cache=2)
+        st = planner.stats
+        a = np.array([0, 1], dtype=np.int64)
+        planner._cached_closure(a, st)
+        planner._cached_closure(a, st)
+        assert st.closure_hits == 1
+        planner._cached_closure(np.array([2], dtype=np.int64), st)
+        planner._cached_closure(np.array([3], dtype=np.int64), st)
+        assert len(planner._closures) == 2  # `a` evicted
+        planner._cached_closure(a, st)
+        assert st.closure_hits == 1  # miss after eviction
+
+    def test_disabled_cache_never_stores(self, task):
+        planner = EgoPlanner(task.batch, depth=2)
+        planner._cached_closure(np.array([0], dtype=np.int64),
+                                planner.stats)
+        assert len(planner._closures) == 0
+
+    def test_invalidate_drops_only_touching_closures(self, task):
+        planner = EgoPlanner(task.batch, depth=2, closure_cache=8)
+        st = planner.stats
+        a = np.array([0], dtype=np.int64)
+        b = np.array([1], dtype=np.int64)
+        full_a, _ = planner._cached_closure(a, st)
+        planner._cached_closure(b, st)
+        t = planner.label_type
+        dropped = planner.invalidate({t: full_a[t][:1]})
+        assert dropped >= 1
+        assert len(planner._closures) < 2 or dropped == 2
+
+    def test_carry_from_rejects_mismatched_planner(self, task):
+        p1 = EgoPlanner(task.batch, depth=2, closure_cache=4)
+        p2 = EgoPlanner(task.batch, depth=p1.depth + 1, closure_cache=4)
+        with pytest.raises(ValueError, match="portable"):
+            p2.carry_from(p1)
+
+    def test_carry_from_skips_dirty(self, task):
+        p1 = EgoPlanner(task.batch, depth=2, closure_cache=4)
+        st = p1.stats
+        full_a, _ = p1._cached_closure(np.array([0], dtype=np.int64), st)
+        p1._cached_closure(np.array([1], dtype=np.int64), st)
+        p2 = EgoPlanner(task.batch, depth=2, closure_cache=4)
+        t = p1.label_type
+        carried = p2.carry_from(p1, {t: full_a[t][:1]})
+        assert carried >= 1
+        assert len(p2._closures) < len(p1._closures) or carried == 2
+
+    def test_adopt_ego_cache_guard(self, task):
+        s1 = task.compile(FUSED)
+        other = pipeline.prepare("rgat", "imdb", scale=0.05,
+                                 max_degree=None, seed=0)
+        s2 = other.compile(FUSED)
+        with pytest.raises(ValueError, match="portable"):
+            s1.adopt_ego_cache(s2)
